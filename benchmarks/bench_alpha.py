@@ -1,0 +1,17 @@
+"""Paper Figure 4/6: sweep of the quality constraint alpha (batching)."""
+from __future__ import annotations
+
+from repro.core import (OmniRouter, RouterConfig, SchedulerConfig, run_serving)
+
+from .common import emit, retrieval_predictor, splits, trained_predictor
+
+
+def run():
+    _, _, test = splits()
+    for alpha in (0.70, 0.75, 0.80, 0.85, 0.90):
+        for name, pred in (("ECCOS-R", retrieval_predictor()),
+                           ("ECCOS-T", trained_predictor())):
+            router = OmniRouter(pred, RouterConfig(alpha=alpha), name=name)
+            res = run_serving(test, router, SchedulerConfig(loads=4))
+            emit(f"fig4_alpha{alpha:.2f}_{name}", 0.0,
+                 f"SR={res.success_rate:.4f};cost=${res.cost:.4f}")

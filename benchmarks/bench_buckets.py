@@ -1,0 +1,21 @@
+"""Paper Table 3: effect of bucket count on the trained predictor + serving."""
+from __future__ import annotations
+
+from repro.core import (OmniRouter, PredictorConfig, RouterConfig,
+                        SchedulerConfig, TrainedPredictor, run_serving)
+
+from .common import emit, splits
+
+
+def run():
+    train, _, test = splits()
+    for nb in (10, 20, 50):
+        p = TrainedPredictor(PredictorConfig(n_models=train.m, n_buckets=nb))
+        p.fit(train, steps=100, batch=64)
+        acc = p.eval_accuracy(test)
+        router = OmniRouter(p, RouterConfig(alpha=0.75), name=f"T-b{nb}")
+        res = run_serving(test, router, SchedulerConfig(loads=4))
+        emit(f"table3_buckets{nb}", 0.0,
+             f"bucket_exact={acc['bucket_exact']:.3f};"
+             f"bucket_pm1={acc['bucket_within1']:.3f};"
+             f"SR={res.success_rate:.4f};cost=${res.cost:.4f}")

@@ -1,0 +1,50 @@
+"""Kernel microbenchmarks (interpret-mode on CPU: correctness-path timing;
+TPU timings come from the roofline model in EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import emit, timed
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+
+    from repro.kernels.flash_attention.ops import flash_attention
+    q = jax.random.normal(key, (1, 512, 4, 64), jnp.float32)
+    k = jax.random.normal(key, (1, 512, 2, 64), jnp.float32)
+    v = jax.random.normal(key, (1, 512, 2, 64), jnp.float32)
+    _, us = timed(lambda: jax.block_until_ready(
+        flash_attention(q, k, v, causal=True)), repeats=2)
+    emit("kernel_flash_attention_512", us, "B1_S512_H4_K2_D64_causal")
+
+    from repro.kernels.decode_attention.ops import decode_attention
+    qd = jax.random.normal(key, (2, 1, 8, 64), jnp.float32)
+    kc = jax.random.normal(key, (2, 2048, 2, 64), jnp.float32)
+    vc = jax.random.normal(key, (2, 2048, 2, 64), jnp.float32)
+    _, us = timed(lambda: jax.block_until_ready(
+        decode_attention(qd, kc, vc, 1500)), repeats=2)
+    emit("kernel_decode_attention_2k", us, "B2_T2048_H8_K2_D64")
+
+    from repro.kernels.topk_retrieval.ops import topk_retrieval
+    st = jax.random.normal(key, (4096, 128))
+    st = st / jnp.linalg.norm(st, axis=1, keepdims=True)
+    qq = jax.random.normal(key, (64, 128))
+    _, us = timed(lambda: jax.block_until_ready(
+        topk_retrieval(st, qq, 8)[0]), repeats=2)
+    emit("kernel_topk_retrieval_4k", us, "DB4096_d128_B64_k8")
+
+    from repro.kernels.lagrangian_assign.ops import solve_assignment_kernel
+    c = jax.random.uniform(key, (512, 6))
+    a = jax.random.uniform(key, (512, 6))
+    loads = jnp.full((6,), 128.0)
+    _, us = timed(lambda: jax.block_until_ready(
+        solve_assignment_kernel(c, a, 0.7, loads, iters=100)[0]), repeats=2)
+    emit("kernel_lagrangian_solver_512x6", us, "N512_M6_iters100")
+
+    # jnp solver for comparison
+    from repro.core.optimizer import solve_assignment
+    _, us = timed(lambda: jax.block_until_ready(
+        solve_assignment(c, a, 0.7, loads, iters=100)[0]), repeats=2)
+    emit("solver_jnp_512x6", us, "N512_M6_iters100")

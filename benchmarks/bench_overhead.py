@@ -1,0 +1,25 @@
+"""Paper Figure 3: scheduling time vs (simulated) LLM response time."""
+from __future__ import annotations
+
+from repro.core import (OmniRouter, RouterConfig, SchedulerConfig, run_serving)
+
+from .common import emit, retrieval_predictor, splits, trained_predictor
+
+
+def run():
+    from .common import streaming_subset
+    _, _, test = splits()
+    variants = [
+        ("ECCOS-R(S)", retrieval_predictor(), "streaming"),
+        ("ECCOS-R(B)", retrieval_predictor(), "batching"),
+        ("ECCOS-T(S)", trained_predictor(), "streaming"),
+        ("ECCOS-T(B)", trained_predictor(), "batching"),
+    ]
+    for name, pred, mode in variants:
+        router = OmniRouter(pred, RouterConfig(alpha=0.75), name=name)
+        ds = streaming_subset(test) if mode == "streaming" else test
+        res = run_serving(ds, router, SchedulerConfig(mode=mode, loads=4))
+        frac = res.scheduling_seconds / max(res.llm_seconds, 1e-9)
+        emit(f"fig3_overhead_{name}", res.scheduling_seconds * 1e6,
+             f"sched={res.scheduling_seconds:.2f}s;"
+             f"llm={res.llm_seconds:.1f}s;fraction={frac:.4%}")

@@ -1,0 +1,38 @@
+"""Paper Table 1: capability accuracy + length-bucket accuracy per predictor."""
+from __future__ import annotations
+
+import time
+
+from .common import emit, po_policy, retrieval_predictor, s3_policy, splits, trained_predictor
+
+
+def run():
+    _, _, test = splits()
+    rows = []
+
+    t0 = time.perf_counter()
+    acc_r = retrieval_predictor().eval_accuracy(test)
+    us_r = (time.perf_counter() - t0) * 1e6 / max(test.n, 1)
+    rows.append(("ECCOS-R", us_r, acc_r))
+
+    t0 = time.perf_counter()
+    acc_t = trained_predictor().eval_accuracy(test)
+    us_t = (time.perf_counter() - t0) * 1e6 / max(test.n, 1)
+    rows.append(("ECCOS-T", us_t, acc_t))
+
+    s3 = s3_policy()
+    acc_s3 = s3.pred.eval_accuracy(test)
+    rows.append(("S3", 0.0, {"capability_acc": float("nan"),
+                             "bucket_exact": acc_s3["bucket_exact"],
+                             "bucket_within1": acc_s3["bucket_within1"]}))
+    po = po_policy()
+    acc_po = po.ret.eval_accuracy(test)
+    rows.append(("PO", 0.0, {"capability_acc": float("nan"),
+                             "bucket_exact": acc_po["bucket_exact"],
+                             "bucket_within1": acc_po["bucket_within1"]}))
+
+    for name, us, acc in rows:
+        emit(f"table1_predictor_{name}", us,
+             f"cap_acc={acc['capability_acc']:.3f};"
+             f"bucket_exact={acc['bucket_exact']:.3f};"
+             f"bucket_pm1={acc['bucket_within1']:.3f}")

@@ -1,0 +1,27 @@
+"""Roofline summary: reads the dry-run sweep results and emits per-cell terms
+(the full table lives in EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import emit
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "results/dryrun.json")
+
+
+def run():
+    if not os.path.exists(RESULTS):
+        emit("roofline_missing", 0.0, f"no {RESULTS}; run repro.launch.dryrun")
+        return
+    with open(RESULTS) as f:
+        data = json.load(f)
+    for key, rec in sorted(data.items()):
+        if rec.get("status") != "ok" or rec.get("mesh") != "16x16":
+            continue
+        r = rec["roofline"]
+        emit(f"roofline_{rec['arch']}_{rec['shape']}",
+             r["compute_s"] * 1e6,
+             f"dom={r['dominant']};c={r['compute_s']:.3e};"
+             f"m={r['memory_s']:.3e};x={r['collective_s']:.3e};"
+             f"useful={rec.get('useful_flops_ratio') or 0:.3f}")

@@ -1,0 +1,28 @@
+"""Paper Table 6: pool of same-series models (7B/14B/32B analogue)."""
+from __future__ import annotations
+
+from repro.core import (OmniRouter, PredictorConfig, RetrievalPredictor,
+                        RouterConfig, SchedulerConfig, TrainedPredictor,
+                        run_serving)
+
+from .common import emit, dataset, SEED
+
+SERIES = [0, 1, 2]    # qwen-7b, qwen-14b, qwen-32b
+
+
+def run():
+    ds = dataset().restrict_models(SERIES)
+    train, _, test = ds.split(seed=SEED)
+    ret = RetrievalPredictor(k=8).fit(train)
+    tp = TrainedPredictor(PredictorConfig(n_models=train.m))
+    tp.fit(train, steps=100, batch=64)
+    for name, pred in (("ECCOS-R", ret), ("ECCOS-T", tp)):
+        router = OmniRouter(pred, RouterConfig(alpha=0.75), name=name)
+        res = run_serving(test, router, SchedulerConfig(loads=4))
+        per = ";".join(
+            f"{ds.pool[j].name}:n={int(res.per_model_counts[j])}"
+            f",corr={res.per_model_correct[j]:.2f}"
+            f",cost=${res.per_model_cost[j]:.4f}"
+            for j in range(ds.m))
+        emit(f"table6_series_{name}", 0.0,
+             f"SR={res.success_rate:.4f};cost=${res.cost:.4f};{per}")

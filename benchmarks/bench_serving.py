@@ -1,0 +1,34 @@
+"""Paper Table 2: serving SR / $cost, streaming + batching, all methods."""
+from __future__ import annotations
+
+from repro.core import (BalanceAware, OmniRouter, RouterConfig,
+                        SchedulerConfig, run_serving)
+
+from .common import emit, po_policy, retrieval_predictor, s3_policy, splits, trained_predictor
+
+ALPHA = 0.75  # paper default
+
+
+def policies():
+    return [
+        ("BA", BalanceAware()),
+        ("S3", s3_policy()),
+        ("PO", po_policy()),
+        ("ECCOS-T", OmniRouter(trained_predictor(), RouterConfig(alpha=ALPHA),
+                               name="ECCOS-T")),
+        ("ECCOS-R", OmniRouter(retrieval_predictor(), RouterConfig(alpha=ALPHA),
+                               name="ECCOS-R")),
+    ]
+
+
+def run():
+    from .common import streaming_subset
+    _, _, test = splits()
+    for mode in ("streaming", "batching"):
+        ds = streaming_subset(test) if mode == "streaming" else test
+        for name, pol in policies():
+            res = run_serving(ds, pol, SchedulerConfig(mode=mode, loads=4))
+            emit(f"table2_{mode}_{name}",
+                 res.scheduling_seconds * 1e6 / max(ds.n, 1),
+                 f"SR={res.success_rate:.4f};cost=${res.cost:.4f};"
+                 f"makespan={res.makespan:.1f}s;n={ds.n}")

@@ -1,0 +1,30 @@
+"""Paper Table 5: pool of similar-scale models (7B/8B/7B analogue)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (OmniRouter, RetrievalPredictor, RouterConfig,
+                        SchedulerConfig, TrainedPredictor, PredictorConfig,
+                        run_serving)
+
+from .common import emit, dataset, SEED
+
+SIMILAR = [0, 3, 4]   # qwen-7b, llama-8b, r1-7b
+
+
+def run():
+    ds = dataset().restrict_models(SIMILAR)
+    train, _, test = ds.split(seed=SEED)
+    ret = RetrievalPredictor(k=8).fit(train)
+    tp = TrainedPredictor(PredictorConfig(n_models=train.m))
+    tp.fit(train, steps=100, batch=64)
+    for name, pred in (("ECCOS-R", ret), ("ECCOS-T", tp)):
+        router = OmniRouter(pred, RouterConfig(alpha=0.6), name=name)
+        res = run_serving(test, router, SchedulerConfig(loads=4))
+        per = ";".join(
+            f"{ds.pool[j].name}:n={int(res.per_model_counts[j])}"
+            f",corr={res.per_model_correct[j]:.2f}"
+            f",cost=${res.per_model_cost[j]:.4f}"
+            for j in range(ds.m))
+        emit(f"table5_similar_{name}", 0.0,
+             f"SR={res.success_rate:.4f};cost=${res.cost:.4f};{per}")

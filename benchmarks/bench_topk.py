@@ -1,0 +1,20 @@
+"""Paper Table 4: effect of retrieval K on ECCOS-R + serving."""
+from __future__ import annotations
+
+from repro.core import (OmniRouter, RetrievalPredictor, RouterConfig,
+                        SchedulerConfig, run_serving)
+
+from .common import emit, splits
+
+
+def run():
+    train, _, test = splits()
+    for k in (4, 8, 16, 32, 64):
+        ret = RetrievalPredictor(k=k).fit(train)
+        acc = ret.eval_accuracy(test)
+        router = OmniRouter(ret, RouterConfig(alpha=0.75), name=f"R-k{k}")
+        res = run_serving(test, router, SchedulerConfig(loads=4))
+        emit(f"table4_k{k}", 0.0,
+             f"cap_acc={acc['capability_acc']:.3f};"
+             f"bucket_exact={acc['bucket_exact']:.3f};"
+             f"SR={res.success_rate:.4f};cost=${res.cost:.4f}")

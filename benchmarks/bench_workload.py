@@ -1,0 +1,18 @@
+"""Paper Figure 5/6: sweep of the concurrency constraint L (batching)."""
+from __future__ import annotations
+
+from repro.core import (OmniRouter, RouterConfig, SchedulerConfig, run_serving)
+
+from .common import emit, retrieval_predictor, splits, trained_predictor
+
+
+def run():
+    _, _, test = splits()
+    for loads in (4, 8, 12, 16):
+        for name, pred in (("ECCOS-R", retrieval_predictor()),
+                           ("ECCOS-T", trained_predictor())):
+            router = OmniRouter(pred, RouterConfig(alpha=0.75), name=name)
+            res = run_serving(test, router, SchedulerConfig(loads=loads))
+            emit(f"fig5_L{loads}_{name}", 0.0,
+                 f"SR={res.success_rate:.4f};cost=${res.cost:.4f};"
+                 f"makespan={res.makespan:.1f}s")

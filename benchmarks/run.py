@@ -1,0 +1,57 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Full run:
+  PYTHONPATH=src python -m benchmarks.run
+Subset:
+  PYTHONPATH=src python -m benchmarks.run --only table2,fig3
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("table1", "benchmarks.bench_predictors"),
+    ("table2", "benchmarks.bench_serving"),
+    ("fig3", "benchmarks.bench_overhead"),
+    ("fig4", "benchmarks.bench_alpha"),
+    ("fig5", "benchmarks.bench_workload"),
+    ("table3", "benchmarks.bench_buckets"),
+    ("table4", "benchmarks.bench_topk"),
+    ("table5", "benchmarks.bench_similar_scale"),
+    ("table6", "benchmarks.bench_same_series"),
+    ("kernels", "benchmarks.bench_kernels"),
+    ("roofline", "benchmarks.bench_roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of table/figure tags")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for tag, modname in MODULES:
+        if only and tag not in only:
+            continue
+        t0 = time.time()
+        try:
+            import importlib
+            mod = importlib.import_module(modname)
+            mod.run()
+            print(f"# {tag} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception:
+            failures += 1
+            print(f"# {tag} FAILED:", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

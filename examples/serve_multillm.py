@@ -1,0 +1,12 @@
+"""End-to-end driver: serve a small multi-architecture pool with batched
+requests behind the ECCOS/OmniRouter (the paper-kind e2e deliverable).
+
+  PYTHONPATH=src python examples/serve_multillm.py [--requests 24]
+
+Real zoo models (reduced configs) decode real tokens; routing, admission
+control, concurrency limits and cost accounting run exactly as at scale.
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

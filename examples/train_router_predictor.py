@@ -1,0 +1,30 @@
+"""Train the ECCOS-T dual-head predictor (paper §3.1) and report Table-1
+style accuracies.
+
+  PYTHONPATH=src python examples/train_router_predictor.py [--steps 150]
+"""
+import argparse
+
+from repro.core import PredictorConfig, TrainedPredictor
+from repro.data.qaserve import generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--n", type=int, default=1800)
+    ap.add_argument("--buckets", type=int, default=10)
+    args = ap.parse_args()
+
+    ds = generate(n=args.n, seed=0)
+    train, val, test = ds.split()
+    pred = TrainedPredictor(PredictorConfig(n_models=ds.m,
+                                            n_buckets=args.buckets))
+    losses = pred.fit(train, steps=args.steps, batch=64, log_every=25)
+    print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    print("val :", pred.eval_accuracy(val))
+    print("test:", pred.eval_accuracy(test))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro — ECCOS/OmniRouter: budget- and performance-controllable multi-LLM
+routing, as a production multi-pod JAX serving/training framework."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,110 @@
+"""Analytic per-device HBM-traffic model.
+
+The XLA:CPU backend inserts full-buffer copies / selects / transposes around
+while-loop carries and upcasts bf16 dot operands (no native bf16 dots on CPU)
+— artifacts a TPU compilation does not have (in-place DUS aliasing, fused
+converts, one-time layout assignment). HLO-parsed FLOPs and collective bytes
+are reliable (dots and collectives are explicit, loop-trip-scaled); HBM bytes
+are not. This module computes the memory roofline term from the physical
+buffer set instead — exact, auditable, and hardware-faithful:
+
+train   : params (2 reads fwd+bwd, 1 grad write, re-read at update) x microbatches
+          + optimizer state r/w + activations (write fwd, read bwd, remat re-read)
+prefill : params read + KV cache write + activation stream
+decode  : params read + KV cache read (+ one-token column write)
+
+All quantities are divided per device using the same sharding rules the
+dry-run lowers with, so memory terms and collective terms describe the same
+partitioned program.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+from repro.common import ShardingRules, is_decl
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+
+
+def _sharded_frac(spec, mesh) -> float:
+    denom = 1
+    for axes in spec:
+        if axes is None:
+            continue
+        for ax in (axes if isinstance(axes, tuple) else (axes,)):
+            denom *= mesh.shape[ax]
+    return 1.0 / denom
+
+
+def params_bytes_per_device(decls, rules: ShardingRules, mesh) -> float:
+    total = 0.0
+    for leaf in jax.tree.leaves(decls, is_leaf=is_decl):
+        n = float(np.prod(leaf.shape)) if leaf.shape else 1.0
+        itemsize = np.dtype(leaf.dtype).itemsize
+        total += n * itemsize * _sharded_frac(rules.spec(leaf.logical), mesh)
+    return total
+
+
+def cache_bytes_per_device(cache_struct, cache_spec_tree, mesh) -> float:
+    from jax.sharding import PartitionSpec as P
+    flat_c = jax.tree.leaves(cache_struct)
+    flat_s = jax.tree.leaves(cache_spec_tree, is_leaf=lambda x: isinstance(x, P))
+    total = 0.0
+    for st, sp in zip(flat_c, flat_s):
+        n = float(np.prod(st.shape)) if st.shape else 1.0
+        total += n * st.dtype.itemsize * _sharded_frac(sp, mesh)
+    return total
+
+
+def activation_bytes_per_device(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                                microbatches: int = 1) -> float:
+    """Residual-stream activation traffic per device for one full pass.
+
+    Per layer we stream O(k·d) bytes per token (reads+writes of the residual,
+    attention and FFN intermediates, bf16); k≈12 covers q/k/v/o + gate/up/down
+    + norms. Remat re-reads layer inputs once more on the backward pass.
+    """
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    tokens_pd = shape.global_batch * shape.seq_len / dp
+    if shape.is_decode:
+        tokens_pd = shape.global_batch / dp
+        if shape.global_batch < dp:
+            tokens_pd = float(shape.global_batch)
+    k = 12.0
+    layers = cfg.n_layers + cfg.n_enc_layers
+    per_pass = tokens_pd * cfg.d_model * 2 * k * layers
+    if shape.kind == "train":
+        per_pass *= 2.5  # fwd + bwd + remat re-read
+    return per_pass
+
+
+def memory_term(cfg: ModelConfig, shape: ShapeConfig, mesh, rules,
+                decls, cache_struct=None, cache_specs=None,
+                tcfg: TrainConfig | None = None) -> Dict[str, float]:
+    from .roofline import HBM_BW
+    p_pd = params_bytes_per_device(decls, rules, mesh)
+    act = activation_bytes_per_device(
+        cfg, shape, mesh, tcfg.microbatches if tcfg else 1)
+    cache = 0.0
+    if cache_struct is not None and cache_specs is not None:
+        cache = cache_bytes_per_device(cache_struct, cache_specs, mesh)
+    if shape.kind == "train":
+        g = tcfg.microbatches if tcfg else 1
+        # fwd read + bwd read per microbatch; grad write + accum r/w; optimizer
+        # read/write (params + moments, int8 moments ≈ 2 bytes/param)
+        moment_bytes = {"int8": 2.0, "bf16": 4.0, "fp32": 8.0}[
+            tcfg.moment_dtype if tcfg else "fp32"]
+        bytes_pd = p_pd * (2 * g + 3) + p_pd * moment_bytes / 2 + act
+    elif shape.kind == "prefill":
+        bytes_pd = p_pd + act + cache  # cache written once
+    else:  # decode
+        bytes_pd = p_pd + cache + act  # cache read once, column write ~0
+    return {
+        "params_bytes_pd": p_pd,
+        "cache_bytes_pd": cache,
+        "activation_bytes_pd": act,
+        "memory_bytes_pd": bytes_pd,
+        "memory_s": bytes_pd / HBM_BW,
+    }

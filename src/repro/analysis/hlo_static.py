@@ -1,0 +1,404 @@
+"""Static analysis of optimized (post-SPMD) HLO text with loop trip-count
+scaling.
+
+``compiled.cost_analysis()`` reports a while-loop body **once**, so any module
+built around ``lax.scan`` (our layer stacks, microbatch loops) under-counts by
+the trip count. This analyzer parses the HLO text, builds the computation call
+graph (entry → while bodies ×trip, conditionals, fusions), and accumulates:
+
+* ``dot_flops``          — 2 · |result| · |contracting dims|, per dot, scaled
+* ``traffic_bytes``      — operand+result bytes of top-level ops and fusions
+                           (fusion internals excluded — fused intermediates
+                           never touch HBM), scaled
+* ``collective_bytes``   — result bytes of all-gather / all-reduce /
+                           reduce-scatter / all-to-all / collective-permute,
+                           scaled
+
+This is the per-device roofline input (the module is the per-device SPMD
+program). Elementwise FLOPs are ignored (dots dominate; standard MFU
+practice).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3b11fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+|[\w.\-]+)\s*=\s*((?:\([^)]*\)|[^\s]+))\s+([\w\-]+)\((.*)$"
+)
+_BLOCK_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_elems_bytes(type_str: str) -> Tuple[int, int]:
+    elems, total = 0, 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dtype]
+    return elems, total
+
+
+def _dims_of(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str
+
+
+@dataclass
+class Block:
+    name: str
+    is_entry: bool = False
+    instrs: List[Instr] = field(default_factory=list)
+    symtab: Dict[str, str] = field(default_factory=dict)
+
+
+def parse_blocks(text: str) -> Tuple[Dict[str, Block], Optional[str]]:
+    blocks: Dict[str, Block] = {}
+    entry = None
+    cur: Optional[Block] = None
+    for line in text.splitlines():
+        m = _BLOCK_RE.match(line)
+        if m:
+            cur = Block(name=m.group(2), is_entry=bool(m.group(1)))
+            blocks[cur.name] = cur
+            if cur.is_entry:
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        im = _INSTR_RE.match(line)
+        if im:
+            name = im.group(1).lstrip("%")
+            ins = Instr(name=name, type_str=im.group(2), op=im.group(3),
+                        rest=im.group(4))
+            cur.instrs.append(ins)
+            cur.symtab[name] = ins.type_str
+    return blocks, entry
+
+
+_ATTR_COMP_RE = {
+    "body": re.compile(r"body=%?([\w.\-]+)"),
+    "condition": re.compile(r"condition=%?([\w.\-]+)"),
+    "calls": re.compile(r"calls=%?([\w.\-]+)"),
+    "to_apply": re.compile(r"to_apply=%?([\w.\-]+)"),
+    "branches": re.compile(r"branch_computations=\{([^}]*)\}"),
+    "true": re.compile(r"true_computation=%?([\w.\-]+)"),
+    "false": re.compile(r"false_computation=%?([\w.\-]+)"),
+}
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _trip_count(blocks: Dict[str, Block], cond_name: str) -> int:
+    """Largest integer constant in the loop condition ≈ scan trip count."""
+    blk = blocks.get(cond_name)
+    if blk is None:
+        return 1
+    best = 1
+    for ins in blk.instrs:
+        # constants appear as: %c = s32[] constant(16)
+        if ins.op == "constant":
+            m = re.match(r"\s*(\d+)", ins.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _operands(rest: str) -> List[str]:
+    """Operand names: %-refs before the closing paren of the operand list."""
+    head = rest.split(")")[0]
+    return _OPERAND_RE.findall(head)
+
+
+_SLICE_OPS = {"dynamic-slice", "slice", "gather"}
+
+
+def _fusion_traffic(blocks: Dict[str, "Block"], blk: "Block", ins: "Instr",
+                    called: Optional[str]) -> int:
+    """HBM traffic of one fusion: operands read (slice-only params count their
+    slices, not the whole buffer), result written (in-place DUS roots count
+    the update region only)."""
+    fb = blocks.get(called) if called else None
+    ops_ = _operands(ins.rest)
+    total = 0
+    if fb is None:
+        for opn in ops_:
+            if opn in blk.symtab:
+                total += _shape_elems_bytes(blk.symtab[opn])[1]
+        return total + _shape_elems_bytes(ins.type_str)[1]
+    # pure dtype-convert fusions are XLA:CPU artifacts (oneDNN has no native
+    # bf16 mixed dot, so operands get upcast); the TPU MXU consumes bf16
+    # directly and such converts fuse away — count zero HBM traffic.
+    body_ops = {fi.op for fi in fb.instrs if fi.op != "parameter"}
+    if body_ops <= {"convert", "bitcast", "copy"}:
+        return 0
+    # map fusion operands to fused-computation parameters
+    params: Dict[int, str] = {}
+    for fi in fb.instrs:
+        if fi.op == "parameter":
+            m = re.match(r"\s*(\d+)", fi.rest)
+            if m:
+                params[int(m.group(1))] = fi.name
+    # consumer index inside the fused block
+    consumers_of: Dict[str, List["Instr"]] = {}
+    for fi in fb.instrs:
+        for ref in _operands(fi.rest):
+            consumers_of.setdefault(ref, []).append(fi)
+    passthrough = {"convert", "bitcast", "copy", "reshape", "transpose"}
+
+    def param_traffic(pname: str, full_size: int) -> int:
+        """Traffic a big fused operand actually causes: slices read, DUS
+        columns written (buffer itself aliased in place on TPU). Falls back
+        to the full size when any consumer reads the whole buffer."""
+        frontier, seen = [pname], set()
+        slice_bytes = 0
+        while frontier:
+            nm = frontier.pop()
+            if nm in seen:
+                continue
+            seen.add(nm)
+            for fi in consumers_of.get(nm, []):
+                if fi.op in passthrough:
+                    frontier.append(fi.name)
+                elif fi.op in _SLICE_OPS:
+                    slice_bytes += 2 * _shape_elems_bytes(fi.type_str)[1]
+                elif fi.op == "dynamic-update-slice":
+                    fo = _operands(fi.rest)
+                    if fo and fo[0] == nm:  # in-place target
+                        if len(fo) > 1 and fo[1] in fb.symtab:
+                            slice_bytes += 2 * _shape_elems_bytes(fb.symtab[fo[1]])[1]
+                        frontier.append(fi.name)
+                    else:
+                        return full_size
+                else:
+                    return full_size
+        return slice_bytes
+
+    aliased_roots: set = set()
+    for idx, opn in enumerate(ops_):
+        size = _shape_elems_bytes(blk.symtab.get(opn, ""))[1]
+        pname = params.get(idx)
+        if pname is not None and size > 0:
+            pt = param_traffic(pname, size)
+            if pt < size:
+                # mark DUS chains fed by this param as aliased (write counted)
+                aliased_roots.add(pname)
+            size = pt
+        total += size
+    # result write: unwrap converts/bitcasts from ROOT; if the result is an
+    # in-place DUS chain over an aliased param, its column write was already
+    # counted — add nothing.
+    root = fb.instrs[-1] if fb.instrs else None
+    nm = root.name if root else None
+    hops = 0
+    while root is not None and root.op in passthrough and hops < 8:
+        srcs = _operands(root.rest)
+        root = next((fi for fi in fb.instrs if srcs and fi.name == srcs[0]), None)
+        hops += 1
+    if root is not None and root.op == "dynamic-update-slice":
+        fo = _operands(root.rest)
+        origin = fo[0] if fo else None
+        hops = 0
+        while origin is not None and hops < 8:
+            if origin in aliased_roots or origin in params.values():
+                return total  # aliased in-place result
+            src = next((fi for fi in fb.instrs if fi.name == origin), None)
+            if src is None or src.op not in passthrough | {"dynamic-update-slice"}:
+                break
+            so = _operands(src.rest)
+            origin = so[0] if so else None
+            hops += 1
+        upd = fo[1] if len(fo) > 1 else None
+        if upd and upd in fb.symtab:
+            return total + _shape_elems_bytes(fb.symtab[upd])[1]
+    return total + _shape_elems_bytes(ins.type_str)[1]
+
+
+def _produced_from_bf16(blk: "Block", ins: "Instr", hops: int = 4) -> bool:
+    """True if the collective's operand chain reaches a bf16 value through
+    converts / pure-convert fusions / bitcasts (CPU upcast artifact)."""
+    ops_ = _operands(ins.rest)
+    cur = ops_[0] if ops_ else None
+    for _ in range(hops):
+        if cur is None:
+            return False
+        ty = blk.symtab.get(cur, "")
+        if ty.startswith("bf16") or "(bf16" in ty:
+            return True
+        src = next((fi for fi in blk.instrs if fi.name == cur), None)
+        if src is None:
+            return False
+        if src.op in ("convert", "bitcast", "copy", "all-gather", "reshape",
+                      "transpose", "dot", "add"):
+            # `dot`: an f32 dot whose operands are upcast bf16 values yields a
+            # bf16 result on TPU (no preferred_element_type at these sites)
+            nxt = _operands(src.rest)
+            cur = nxt[0] if nxt else None
+            continue
+        if src.op == "fusion":
+            # pure-convert fusion from a bf16 operand?
+            nxt = _operands(src.rest)
+            if nxt and blk.symtab.get(nxt[0], "").startswith("bf16"):
+                return True
+            cur = nxt[0] if nxt else None
+            continue
+        return False
+    return False
+
+
+@dataclass
+class StaticCost:
+    dot_flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: Dict[str, float] = field(default_factory=dict)
+    dots: int = 0
+    while_trips: Dict[str, int] = field(default_factory=dict)
+
+
+_SKIP_TRAFFIC_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "bitcast-convert", "after-all", "partition-id", "replica-id", "iota",
+    # XLA:CPU inserts `copy` around while-loop tuples for buffer aliasing and
+    # `convert` to upcast bf16 dot operands (no native bf16 dots on CPU); on
+    # TPU copies are elided by aliasing and converts fuse into the MXU op —
+    # excluding both keeps the estimate representative of the target hardware.
+    "copy", "copy-start", "copy-done", "convert",
+}
+
+
+def analyze(text: str, on_traffic=None) -> StaticCost:
+    blocks, entry = parse_blocks(text)
+    cost = StaticCost(collectives={c: 0.0 for c in _COLLECTIVES})
+    if entry is None:
+        return cost
+
+    def _note(blk, ins, b, mult):
+        if on_traffic is not None and b * mult > 0:
+            on_traffic(blk, ins, b, mult)
+
+    def visit(block_name: str, mult: float, count_traffic: bool):
+        blk = blocks.get(block_name)
+        if blk is None:
+            return
+        for ins in blk.instrs:
+            op = ins.op
+            if op == "while":
+                cm = _ATTR_COMP_RE["condition"].search(ins.rest)
+                bm = _ATTR_COMP_RE["body"].search(ins.rest)
+                trips = _trip_count(blocks, cm.group(1)) if cm else 1
+                cost.while_trips[ins.name] = trips
+                if bm:
+                    visit(bm.group(1), mult * trips, count_traffic)
+                continue
+            if op == "conditional":
+                for key in ("branches", "true", "false"):
+                    m = _ATTR_COMP_RE[key].search(ins.rest)
+                    if m:
+                        for nm in re.findall(r"%?([\w.\-]+)", m.group(1)):
+                            visit(nm, mult, count_traffic)
+                continue
+            if op == "fusion":
+                cm = _ATTR_COMP_RE["calls"].search(ins.rest)
+                if count_traffic:
+                    ft = _fusion_traffic(blocks, blk, ins,
+                                         cm.group(1) if cm else None)
+                    cost.traffic_bytes += mult * ft
+                    _note(blk, ins, ft, mult)
+                if cm:
+                    visit(cm.group(1), mult, False)  # flops only inside fusion
+                continue
+            if op == "call":
+                cm = _ATTR_COMP_RE["to_apply"].search(ins.rest)
+                if cm:
+                    visit(cm.group(1), mult, count_traffic)
+                continue
+            if op == "dot":
+                res_elems = _shape_elems_bytes(ins.type_str)[0]
+                lhs = _operands(ins.rest)
+                contract = 1
+                cm = _CONTRACT_RE.search(ins.rest)
+                if cm and lhs:
+                    lhs_shape = _dims_of(blk.symtab.get(lhs[0], ""))
+                    for di in cm.group(1).split(","):
+                        if di and int(di) < len(lhs_shape):
+                            contract *= lhs_shape[int(di)]
+                cost.dot_flops += mult * 2.0 * res_elems * contract
+                cost.dots += 1
+                if count_traffic:
+                    b = _shape_elems_bytes(ins.type_str)[1]
+                    for opn in lhs[:2]:
+                        if opn in blk.symtab:
+                            b += _shape_elems_bytes(blk.symtab[opn])[1]
+                    cost.traffic_bytes += mult * b
+                    _note(blk, ins, b, mult)
+                continue
+            is_coll = False
+            for c in _COLLECTIVES:
+                if op in (c, c + "-start"):
+                    elems, b = _shape_elems_bytes(ins.type_str)
+                    # XLA:CPU upcasts bf16 dot operands to f32 *before* the
+                    # collective (no native bf16 dots); a TPU build moves the
+                    # bf16 buffer. Count wire bytes at the producer's width.
+                    if b == 4 * elems and _produced_from_bf16(blk, ins):
+                        b = 2 * elems
+                    cost.collective_bytes += mult * b
+                    cost.collectives[c] = cost.collectives.get(c, 0.0) + mult * b
+                    is_coll = True
+                    break
+            if is_coll:
+                continue
+            if not count_traffic or op in _SKIP_TRAFFIC_OPS or op.endswith("-done"):
+                continue
+            if op in ("while", "conditional", "call"):
+                continue  # bodies are visited; the node itself moves nothing
+            if op in ("dynamic-slice", "slice", "gather"):
+                # reads only the slice: read + write = 2x result
+                cost.traffic_bytes += mult * 2 * _shape_elems_bytes(ins.type_str)[1]
+                continue
+            if op in ("dynamic-update-slice", "scatter"):
+                # in-place update: read + write the update operand only
+                ops_ = _operands(ins.rest)
+                b = 0
+                if len(ops_) >= 2 and ops_[1] in blk.symtab:
+                    b = 2 * _shape_elems_bytes(blk.symtab[ops_[1]])[1]
+                cost.traffic_bytes += mult * b
+                continue
+            b = _shape_elems_bytes(ins.type_str)[1]
+            for opn in _operands(ins.rest):
+                if opn in blk.symtab:
+                    b += _shape_elems_bytes(blk.symtab[opn])[1]
+            cost.traffic_bytes += mult * b
+            _note(blk, ins, b, mult)
+
+    visit(entry, 1.0, True)
+    return cost

@@ -1,0 +1,120 @@
+"""Render the dry-run sweep (results/dryrun.json) into the EXPERIMENTS.md
+§Dry-run and §Roofline markdown tables."""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict
+
+from repro.configs import SHAPES, list_archs
+
+
+def _fmt_bytes(b: float) -> str:
+    if b >= 1e12:
+        return f"{b/1e12:.2f}TB"
+    if b >= 1e9:
+        return f"{b/1e9:.2f}GB"
+    return f"{b/1e6:.1f}MB"
+
+
+def _fmt_s(s: float) -> str:
+    if s >= 1.0:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s*1e3:.2f}ms"
+    return f"{s*1e6:.1f}us"
+
+
+def roofline_table(data: Dict, mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "roofline frac (dom) | useful ratio | what would move the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    hints = {
+        ("compute_s",): "skip masked causal blocks; larger per-device microbatch",
+        ("memory_s",): "cut param/cache re-reads: fuse, quantize KV, window caches",
+        ("collective_s",): "bf16 collectives; gather once per step, not per microbatch",
+    }
+    for arch in list_archs():
+        for shape in SHAPES:
+            key = f"{arch}|{shape}|{mesh}"
+            rec = data.get(key)
+            if rec is None:
+                continue
+            if rec["status"] == "skipped":
+                lines.append(f"| {arch} | {shape} | — | — | — | skipped | — | — | "
+                             f"{rec['reason'].split('(')[0].strip()} |")
+                continue
+            if rec["status"] != "ok":
+                lines.append(f"| {arch} | {shape} | ERROR | | | | | | {rec['error'][:60]} |")
+                continue
+            r = rec["roofline"]
+            dom = r["dominant"]
+            tmax = max(r["compute_s"], r["memory_s"], r["collective_s"])
+            frac = r["compute_s"] / tmax if tmax else 0
+            useful = rec.get("useful_flops_ratio")
+            hint = {
+                "compute_s": "mask-skip causal blocks / raise per-dev batch",
+                "memory_s": "reduce re-reads (fused CE, windowed caches, int8 states)",
+                "collective_s": "bf16 collectives; amortize FSDP gathers over microbatches",
+            }[dom]
+            lines.append(
+                f"| {arch} | {shape} | {_fmt_s(r['compute_s'])} | "
+                f"{_fmt_s(r['memory_s'])} | {_fmt_s(r['collective_s'])} | "
+                f"{dom.replace('_s','')} | {frac:.2f} | "
+                f"{'' if useful is None else f'{useful:.2f}'} | {hint} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(data: Dict) -> str:
+    lines = [
+        "| arch | shape | mesh | status | bytes/dev (args+temp) | "
+        "flops/dev | collective bytes/dev | collectives | compile |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in list_archs():
+        for shape in SHAPES:
+            for mesh, tag in (("single", "16x16"), ("multi", "2x16x16")):
+                rec = data.get(f"{arch}|{shape}|{mesh}")
+                if rec is None:
+                    continue
+                if rec["status"] == "skipped":
+                    lines.append(f"| {arch} | {shape} | {tag} | skipped | — | — | — | — | — |")
+                    continue
+                if rec["status"] != "ok":
+                    lines.append(f"| {arch} | {shape} | {tag} | ERROR | | | | | |")
+                    continue
+                mem = rec["memory"]
+                args_b = mem.get("argument_size_in_bytes", -1)
+                tmp_b = mem.get("temp_size_in_bytes", -1)
+                cc = rec["collectives"]
+                cstr = " ".join(f"{k.split('-')[0][:2]}{k.split('-')[-1][:3]}:"
+                                f"{_fmt_bytes(v)}" for k, v in cc.items()
+                                if k != "count" and v > 0) or "none"
+                lines.append(
+                    f"| {arch} | {shape} | {tag} | ok | "
+                    f"{_fmt_bytes(args_b)}+{_fmt_bytes(tmp_b)} | "
+                    f"{rec['flops_per_device']:.2e} | "
+                    f"{_fmt_bytes(rec['collective_bytes_per_device'])} | {cstr} | "
+                    f"{rec['compile_s']:.0f}s |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results/dryrun.json")
+    ap.add_argument("--which", default="both", choices=["roofline", "dryrun", "both"])
+    args = ap.parse_args()
+    with open(args.results) as f:
+        data = json.load(f)
+    if args.which in ("roofline", "both"):
+        print("## Roofline (single-pod 16x16)\n")
+        print(roofline_table(data))
+    if args.which in ("dryrun", "both"):
+        print("\n## Dry-run\n")
+        print(dryrun_table(data))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Roofline term extraction from compiled dry-run artifacts.
+
+Hardware model: TPU v5e — 197 bf16 TFLOP/s, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+``cost_analysis()`` reports the per-device (post-SPMD) program, so:
+    compute term    = flops_per_device / PEAK_FLOPS
+    memory term     = bytes_per_device / HBM_BW
+    collective term = collective_bytes_per_device / ICI_BW
+which equal the assignment's total/(chips x per-chip) forms when work divides
+evenly. Collective bytes are parsed from the optimized HLO text: we sum the
+result-buffer bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction (documented proxy for per-device
+link traffic).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Iterable
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum bytes over every array shape appearing in an HLO type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes from (optimized) HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # instruction lines look like:  %name = TYPE kind(...)
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[^ ]+)\s+([\w\-]+)", s)
+        if not m:
+            continue
+        kind = m.group(2)
+        for c in _COLLECTIVES:
+            if kind in (c, c + "-start"):
+                out[c] += _shape_bytes(m.group(1))
+                out["count"] += 1
+                break
+    return out
+
+
+def roofline_terms(flops_pd: float, bytes_pd: float, coll_bytes_pd: float) -> Dict[str, float]:
+    t_compute = flops_pd / PEAK_FLOPS
+    t_memory = bytes_pd / HBM_BW
+    t_coll = coll_bytes_pd / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    terms["dominant"] = dominant
+    bound = max(t_compute, t_memory, t_coll)
+    terms["roofline_fraction_compute"] = t_compute / bound if bound > 0 else 0.0
+    return terms
+
+
+def model_flops(active_params: int, tokens: int, *, training: bool) -> float:
+    """6·N·D for training, 2·N·D for inference (standard MFU reference)."""
+    return (6.0 if training else 2.0) * active_params * tokens

@@ -1,0 +1,20 @@
+from .sharding import (  # noqa: F401
+    ShardingRules,
+    active_mesh,
+    active_rules,
+    base_rules,
+    logical_shard,
+    named_sharding,
+    use_mesh,
+)
+from .params import (  # noqa: F401
+    ParamDecl,
+    count_params,
+    init_params,
+    is_decl,
+    param_shardings,
+    param_specs,
+    param_structs,
+    param_structs_sharded,
+    tree_bytes,
+)

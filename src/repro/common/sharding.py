@@ -1,0 +1,151 @@
+"""Logical-axis sharding: a tiny, explicit alternative to flax's logical axes.
+
+Modules annotate arrays with *logical* axis names (e.g. ``('batch','seq','embed')``).
+A :class:`ShardingRules` table maps logical names to physical mesh axes.  When no
+mesh context is active every annotation is a no-op, so the same model code runs
+unsharded on CPU tests and fully sharded under the production mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field, replace
+from typing import Mapping, Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[str, Sequence[str], None]
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Mapping from logical axis names to physical mesh axis (or axes)."""
+
+    rules: Mapping[str, MeshAxes] = field(default_factory=dict)
+
+    def mesh_axes(self, logical: Optional[str]) -> MeshAxes:
+        if logical is None:
+            return None
+        axes = self.rules.get(logical, None)
+        if isinstance(axes, list):
+            return tuple(axes)
+        return axes
+
+    def spec(self, logical_axes: Sequence[Optional[str]]) -> P:
+        """PartitionSpec for a tuple of logical axis names (None entries allowed)."""
+        return P(*(self.mesh_axes(a) for a in logical_axes))
+
+    def with_overrides(self, **overrides: MeshAxes) -> "ShardingRules":
+        merged = dict(self.rules)
+        merged.update(overrides)
+        return replace(self, rules=merged)
+
+
+class _MeshContext(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Optional[ShardingRules] = None
+
+
+_CTX = _MeshContext()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[ShardingRules]):
+    """Activate (mesh, rules) for ``logical_shard`` annotations in this thread."""
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, rules
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def active_rules() -> Optional[ShardingRules]:
+    return _CTX.rules
+
+
+def logical_shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Annotate ``x`` with the sharding implied by logical axis names.
+
+    No-op when no mesh context is active (single-device tests) or when every
+    logical axis maps to None.
+    """
+    mesh, rules = _CTX.mesh, _CTX.rules
+    if mesh is None or rules is None:
+        return x
+    spec = rules.spec(logical_axes)
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(mesh: Mesh, rules: ShardingRules, logical_axes) -> NamedSharding:
+    return NamedSharding(mesh, rules.spec(logical_axes))
+
+
+# ---------------------------------------------------------------------------
+# Default logical-axis tables.
+#
+# Mesh axes: single-pod ('data','model'); multi-pod ('pod','data','model').
+# 'data' doubles as the FSDP axis for parameter storage during training.
+# ---------------------------------------------------------------------------
+
+def base_rules(multi_pod: bool = False, *, fsdp: bool = True,
+               attn_policy: str = "head_tp") -> ShardingRules:
+    """Build the standard rule table.
+
+    attn_policy:
+      'head_tp'  — attention heads sharded over 'model' (requires divisibility)
+      'seq_sp'   — sequence-parallel attention (heads replicated, q-seq sharded)
+    """
+    dp = ("pod", "data") if multi_pod else ("data",)
+    fs = "data" if fsdp else None
+    rules = {
+        # activations
+        "batch": dp,
+        "seq": None,
+        "embed": None,
+        "heads": "model" if attn_policy == "head_tp" else None,
+        "kv_heads": "model" if attn_policy == "head_tp" else None,
+        "head_dim": None,
+        "qseq": "model" if attn_policy == "seq_sp" else None,  # SP: shard q-seq
+        "kvseq": None,
+        "mlp_act": "model",
+        "vocab_act": "model",
+        # decode-time KV cache: sequence split over 'model' (flash-decode)
+        "cache_seq": "model",
+        "cache_batch": dp,
+        "cache_kv_heads": None,
+        # parameter storage axes
+        "p_embed": fs,            # FSDP shard dim for most weights
+        "p_mlp": "model",         # TP shard dim (column/row parallel)
+        "p_heads": "model",
+        "p_kv_heads": "model",
+        "p_vocab": "model",
+        "p_experts": "data",      # expert-parallel storage/compute over data
+        "p_expert_embed": None,   # expert d_model dim (experts already 2D-sharded)
+        "p_layers": None,
+        "p_none": None,
+        # optimizer / ZeRO
+        "zero": ("data",),
+        # router / ECCOS
+        "queries": dp,
+        "models": None,
+        "db_rows": "model",
+        "db_dim": None,
+    }
+    if attn_policy == "seq_sp":
+        # attention projections stay FSDP-sharded on the embed dim, heads replicated
+        rules["p_heads"] = None
+        rules["p_kv_heads"] = None
+    return ShardingRules(rules=rules)

@@ -1,0 +1,10 @@
+# ECCOS/OmniRouter core: multi-objective predictors (trained + retrieval),
+# Lagrangian-dual constrained optimizer, serving scheduler, baselines.
+from .baselines import (BalanceAware, Oracle, PerceptionOnly, Policy,  # noqa: F401
+                        RandomPolicy, S3Cost)
+from .optimizer import (brute_force, repair_workload, solve_assignment,  # noqa: F401
+                        solve_budget)
+from .predictor import PredictorConfig, TrainedPredictor  # noqa: F401
+from .retrieval import RetrievalPredictor  # noqa: F401
+from .router import OmniRouter, RouterConfig, evaluate_assignment  # noqa: F401
+from .scheduler import SchedulerConfig, ServeResult, run_serving  # noqa: F401

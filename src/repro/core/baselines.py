@@ -1,0 +1,124 @@
+"""Baseline routing policies from the paper's evaluation (§4.2).
+
+BA — balance-aware: least-loaded model, random tie-break.
+S3 — encoder length-bucket predictor, adapted cost-oriented (cheapest
+     predicted-cost model with available capacity).
+PO — perception-only decoder length predictor, also cost-adapted; realized
+     here as a noisier single-neighbour retrieval length estimate.
+random / oracle — bounds. Oracle knows true correctness and picks the
+cheapest correct model (else the most capable), respecting workloads.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.data.qaserve import QAServe
+
+
+class Policy:
+    name = "base"
+
+    def prepare(self, train_ds: QAServe):
+        return self
+
+    def route(self, ds: QAServe, loads: np.ndarray,
+              counts: Optional[np.ndarray] = None, rng=None) -> np.ndarray:
+        raise NotImplementedError
+
+
+def _capacity_greedy(pref_costs: np.ndarray, loads, counts, rng) -> np.ndarray:
+    """Assign each query to its cheapest model with remaining capacity."""
+    n, m = pref_costs.shape
+    counts = np.zeros(m, int) if counts is None else counts.astype(int).copy()
+    out = np.zeros(n, int)
+    order = rng.permutation(n) if rng is not None else np.arange(n)
+    for i in order:
+        ranked = np.argsort(pref_costs[i])
+        for j in ranked:
+            if counts[j] < loads[j]:
+                out[i] = j
+                counts[j] += 1
+                break
+        else:
+            out[i] = int(np.argmin(counts - loads))  # all full: least overfull
+            counts[out[i]] += 1
+    return out
+
+
+class BalanceAware(Policy):
+    name = "BA"
+
+    def route(self, ds, loads, counts=None, rng=None):
+        rng = rng or np.random.RandomState(0)
+        n, m = ds.n, ds.m
+        counts = np.zeros(m, int) if counts is None else counts.astype(int).copy()
+        out = np.zeros(n, int)
+        for i in range(n):
+            free = loads - counts
+            best = np.flatnonzero(free == free.max())
+            out[i] = rng.choice(best)
+            counts[out[i]] += 1
+        return out
+
+
+class S3Cost(Policy):
+    """Length-bucket predictor (encoder) -> cheapest predicted cost."""
+
+    name = "S3"
+
+    def __init__(self, n_buckets: int = 10, steps: int = 200):
+        self.n_buckets = n_buckets
+        self.steps = steps
+        self.pred = None
+
+    def prepare(self, train_ds):
+        from .predictor import PredictorConfig, TrainedPredictor
+        self.pred = TrainedPredictor(PredictorConfig(
+            n_models=train_ds.m, n_buckets=self.n_buckets))
+        self.pred.fit(train_ds, steps=self.steps, batch=48)
+        return self
+
+    def route(self, ds, loads, counts=None, rng=None):
+        _, _, cost = self.pred.predict_arrays(ds)
+        return _capacity_greedy(cost, loads, counts, rng)
+
+
+class PerceptionOnly(Policy):
+    """Generative length perception (noisy) -> cheapest predicted cost."""
+
+    name = "PO"
+
+    def __init__(self):
+        self.ret = None
+
+    def prepare(self, train_ds):
+        from .retrieval import RetrievalPredictor
+        self.ret = RetrievalPredictor(k=1).fit(train_ds)
+        return self
+
+    def route(self, ds, loads, counts=None, rng=None):
+        _, _, cost = self.ret.predict_arrays(ds)
+        return _capacity_greedy(cost, loads, counts, rng)
+
+
+class RandomPolicy(Policy):
+    name = "random"
+
+    def route(self, ds, loads, counts=None, rng=None):
+        rng = rng or np.random.RandomState(0)
+        return _capacity_greedy(rng.rand(ds.n, ds.m), loads, counts, rng)
+
+
+class Oracle(Policy):
+    """Upper bound: true correctness known."""
+
+    name = "oracle"
+
+    def route(self, ds, loads, counts=None, rng=None):
+        cost = ds.cost_matrix()
+        # cheapest correct model; incorrect ones get +inf-ish penalty
+        pref = cost + (1 - ds.correct) * 1e3
+        return _capacity_greedy(pref, loads, counts, rng)

@@ -1,0 +1,221 @@
+"""ECCOS/OmniRouter constrained optimizer (paper §3.2, Appendix A).
+
+Primal:   min_x  Σ c_ij x_ij
+          s.t.   (1/N) Σ a_ij x_ij >= alpha        (quality)
+                 Σ_i x_ij <= L_j                    (per-model workload)
+                 Σ_j x_ij = 1,  x in {0,1}
+
+Dual subgradient ascent (Eq. 9-12): assignments are per-query argmins of the
+reduced cost  c_ij − λ1·a_ij/N + λ2,j ; λ1 tracks quality violation, λ2,j
+tracks per-model overload. We additionally keep the **best feasible iterate**
+(min cost among quality- and load-feasible x) — dual iterates oscillate around
+the constraint boundary, and the paper's serving loop wants a concrete
+feasible pick.
+
+A budget-controllable dual mode (OmniRouter title) is included:
+max quality s.t. Σ cost <= B, same machinery with the roles of cost/quality
+swapped (multiplier mu on the budget).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    iters: int = 150
+    lr_quality: float = 4.0     # alpha_1 in Eq. 9 (scaled by N internally)
+    lr_workload: float = 0.5    # alpha_2 in Eq. 10
+    use_kernel: bool = False    # Pallas fused assign step
+
+
+def _assign(cost, quality, lam1, lam2, n):
+    scores = cost - lam1 * quality / n + lam2[None, :]
+    return jnp.argmin(scores, axis=1)
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def solve_assignment(cost: jax.Array, quality: jax.Array, alpha: float,
+                     loads: jax.Array, *, iters: int = 150,
+                     lr_quality: float = 4.0, lr_workload: float = 0.5):
+    """Returns (assignment (N,), info dict). All fp32, jit-compiled."""
+    n, m = cost.shape
+    cost = cost.astype(jnp.float32)
+    quality = quality.astype(jnp.float32)
+    loads = loads.astype(jnp.float32)
+
+    def qual_of(x):
+        return jnp.take_along_axis(quality, x[:, None], axis=1).mean()
+
+    def cost_of(x):
+        return jnp.take_along_axis(cost, x[:, None], axis=1).sum()
+
+    def counts_of(x):
+        return jnp.zeros((m,), jnp.float32).at[x].add(1.0)
+
+    def body(t, carry):
+        lam1, lam2, best_cost, best_x, found = carry
+        x = _assign(cost, quality, lam1, lam2, n)
+        q = qual_of(x)
+        cnt = counts_of(x)
+        c = cost_of(x)
+        feasible = (q >= alpha) & jnp.all(cnt <= loads)
+        better = feasible & (c < best_cost)
+        best_cost = jnp.where(better, c, best_cost)
+        best_x = jnp.where(better, x, best_x)
+        found = found | feasible
+        # diminishing steps for subgradient convergence
+        step = 1.0 / jnp.sqrt(1.0 + t.astype(jnp.float32))
+        lam1 = jnp.maximum(lam1 + lr_quality * n * step * (alpha - q), 0.0)
+        lam2 = jnp.maximum(lam2 + lr_workload * step * (cnt - loads), 0.0)
+        return lam1, lam2, best_cost, best_x, found
+
+    init = (jnp.zeros(()), jnp.zeros((m,)), jnp.asarray(jnp.inf),
+            jnp.zeros((n,), jnp.int32), jnp.asarray(False))
+    lam1, lam2, best_cost, best_x, found = jax.lax.fori_loop(
+        0, iters, body, init)
+    x_last = _assign(cost, quality, lam1, lam2, n)
+    x = jnp.where(found, best_x, x_last)
+    info = {
+        "lambda1": lam1, "lambda2": lam2, "feasible": found,
+        "cost": jnp.where(found, best_cost, cost_of(x_last)),
+        "quality": qual_of(x), "counts": counts_of(x),
+    }
+    return x, info
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def solve_budget(cost: jax.Array, quality: jax.Array, budget: float,
+                 loads: jax.Array, *, iters: int = 150,
+                 lr_budget: float = 50.0, lr_workload: float = 0.5):
+    """Budget mode: max (1/N)Σ a_ij x_ij  s.t. Σ c_ij x_ij <= B, loads."""
+    n, m = cost.shape
+    cost = cost.astype(jnp.float32)
+    quality = quality.astype(jnp.float32)
+    loads = loads.astype(jnp.float32)
+
+    def body(t, carry):
+        mu, lam2, best_q, best_x, found = carry
+        scores = -quality + mu * cost + lam2[None, :]
+        x = jnp.argmin(scores, axis=1)
+        c = jnp.take_along_axis(cost, x[:, None], axis=1).sum()
+        q = jnp.take_along_axis(quality, x[:, None], axis=1).mean()
+        cnt = jnp.zeros((m,), jnp.float32).at[x].add(1.0)
+        feasible = (c <= budget) & jnp.all(cnt <= loads)
+        better = feasible & (q > best_q)
+        best_q = jnp.where(better, q, best_q)
+        best_x = jnp.where(better, x, best_x)
+        found = found | feasible
+        step = 1.0 / jnp.sqrt(1.0 + t.astype(jnp.float32))
+        mu = jnp.maximum(mu + lr_budget * step * (c - budget), 0.0)
+        lam2 = jnp.maximum(lam2 + lr_workload * step * (cnt - loads), 0.0)
+        return mu, lam2, best_q, best_x, found
+
+    init = (jnp.zeros(()), jnp.zeros((m,)), jnp.asarray(-jnp.inf),
+            jnp.zeros((n,), jnp.int32), jnp.asarray(False))
+    mu, lam2, best_q, best_x, found = jax.lax.fori_loop(0, iters, body, init)
+    scores = -quality + mu * cost + lam2[None, :]
+    x_last = jnp.argmin(scores, axis=1)
+    x = jnp.where(found, best_x, x_last)
+    return x, {"mu": mu, "lambda2": lam2, "feasible": found}
+
+
+def repair_workload(x: np.ndarray, cost: np.ndarray, quality: np.ndarray,
+                    loads: np.ndarray, lam1: float = 0.0) -> np.ndarray:
+    """Host-side greedy repair: enforce Σ_i x_ij <= L_j exactly by moving the
+    cheapest-to-move queries off overloaded models (used by the scheduler,
+    which must never violate concurrency limits)."""
+    x = np.asarray(x).copy()
+    n, m = cost.shape
+    loads = np.asarray(loads, dtype=int)
+    counts = np.bincount(x, minlength=m)
+    reduced = cost - lam1 * quality / max(n, 1)
+    for j in np.argsort(-counts):
+        while counts[j] > loads[j]:
+            assigned = np.where(x == j)[0]
+            free = np.where(counts < loads)[0]
+            if len(free) == 0:
+                return x  # system saturated; caller queues the overflow
+            # move the query whose best alternative costs least extra
+            alt_cost = reduced[assigned][:, free]
+            best_alt = alt_cost.argmin(axis=1)
+            delta = alt_cost[np.arange(len(assigned)), best_alt] - \
+                reduced[assigned, j]
+            pick = delta.argmin()
+            qi, nj = assigned[pick], free[best_alt[pick]]
+            x[qi] = nj
+            counts[j] -= 1
+            counts[nj] += 1
+    return x
+
+
+def primal_polish(x: np.ndarray, cost: np.ndarray, quality: np.ndarray,
+                  alpha: float, loads: np.ndarray, sweeps: int = 4) -> np.ndarray:
+    """Greedy primal improvement: move queries to cheaper models whenever the
+    quality constraint's slack and the target's capacity allow it. Closes most
+    of the subgradient method's duality gap (dual iterates only visit argmin
+    assignments, which need not contain the primal optimum)."""
+    x = np.asarray(x).copy()
+    n, m = cost.shape
+    counts = np.bincount(x, minlength=m).astype(float)
+    qual_sum = quality[np.arange(n), x].sum()
+    # phase 0 — restore quality feasibility if the dual left us short: move
+    # queries to higher-quality models, best quality-gain-per-dollar first
+    guard = 0
+    while qual_sum < n * alpha - 1e-9 and guard < 4 * n:
+        guard += 1
+        gain = quality - quality[np.arange(n), x][:, None]       # (N, M)
+        extra = cost - cost[np.arange(n), x][:, None]
+        ok = (gain > 1e-12) & (counts[None, :] < loads[None, :])
+        if not ok.any():
+            break
+        score = np.where(ok, gain / np.maximum(extra, 1e-9), -np.inf)
+        i, j = np.unravel_index(np.argmax(score), score.shape)
+        counts[x[i]] -= 1
+        counts[j] += 1
+        qual_sum += quality[i, j] - quality[i, x[i]]
+        x[i] = j
+    for _ in range(sweeps):
+        improved = False
+        order = np.argsort(-(cost[np.arange(n), x]))  # expensive queries first
+        for i in order:
+            cur = x[i]
+            slack = qual_sum - n * alpha
+            deltas = cost[i] - cost[i, cur]                 # <0 == cheaper
+            ok = (deltas < -1e-12) & (counts < loads) & \
+                 (quality[i] - quality[i, cur] >= -slack - 1e-12)
+            ok[cur] = False
+            if ok.any():
+                j = int(np.flatnonzero(ok)[np.argmin(deltas[ok])])
+                counts[cur] -= 1
+                counts[j] += 1
+                qual_sum += quality[i, j] - quality[i, cur]
+                x[i] = j
+                improved = True
+        if not improved:
+            break
+    return x
+
+
+def brute_force(cost: np.ndarray, quality: np.ndarray, alpha: float,
+                loads: np.ndarray) -> Optional[np.ndarray]:
+    """Exact solver for tiny instances (test oracle)."""
+    import itertools
+    n, m = cost.shape
+    best, best_c = None, np.inf
+    for x in itertools.product(range(m), repeat=n):
+        x = np.array(x)
+        if np.any(np.bincount(x, minlength=m) > loads):
+            continue
+        if quality[np.arange(n), x].mean() < alpha:
+            continue
+        c = cost[np.arange(n), x].sum()
+        if c < best_c:
+            best, best_c = x, c
+    return best

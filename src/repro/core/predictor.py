@@ -1,0 +1,193 @@
+"""ECCOS-T: training-based multi-objective predictor (paper §3.1, Fig. 2).
+
+A small in-repo BERT-style encoder produces the query embedding q; each pool
+model has a learned embedding e_j. Two heads over the interaction vector
+q ⊙ e_j (the paper's inner-product form with learnable readout):
+
+    capability  s_ij = sigmoid( W1 (q ⊙ e_j) + b1 )           (Eq. 3)
+    length      P(B_k | i,j) = softmax( W2 (q ⊙ e_j) + b2 )_k (Eq. 4)
+
+Trained with BCE (capability) + CE (length buckets) on (Synth)QAServe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import ParamDecl, init_params, logical_shard
+from repro.data import tokenizer
+from repro.data.qaserve import QAServe, bucketize, bucket_expectation, L_MAX
+
+
+@dataclasses.dataclass(frozen=True)
+class PredictorConfig:
+    """Sized for the routing latency budget (paper: bert-base; here a compact
+    encoder — the dual-head structure over q ⊙ e_j is identical)."""
+
+    n_models: int = 6
+    vocab: int = tokenizer.VOCAB
+    max_len: int = 48
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 512
+    n_buckets: int = 10          # paper default (Table 3)
+    lr: float = 1e-3
+    dtype: object = jnp.float32
+
+
+def _enc_layer_decls(cfg: PredictorConfig) -> dict:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.d_model // cfg.n_heads
+    return {
+        "ln1": ParamDecl((d,), ("p_none",), init="ones", dtype=cfg.dtype),
+        "wqkv": ParamDecl((d, 3, h, hd), ("p_embed", "p_none", "p_heads", "p_none"),
+                          init="scaled", dtype=cfg.dtype),
+        "wo": ParamDecl((h, hd, d), ("p_heads", "p_none", "p_embed"),
+                        init="scaled", dtype=cfg.dtype),
+        "ln2": ParamDecl((d,), ("p_none",), init="ones", dtype=cfg.dtype),
+        "w1": ParamDecl((d, cfg.d_ff), ("p_embed", "p_mlp"), init="scaled",
+                        dtype=cfg.dtype),
+        "w2": ParamDecl((cfg.d_ff, d), ("p_mlp", "p_embed"), init="scaled",
+                        dtype=cfg.dtype),
+    }
+
+
+def predictor_decls(cfg: PredictorConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "tok_embed": ParamDecl((cfg.vocab, d), ("p_vocab", "p_embed"),
+                               init="normal", dtype=cfg.dtype),
+        "pos_embed": ParamDecl((cfg.max_len, d), ("p_none", "p_embed"),
+                               init="normal", dtype=cfg.dtype),
+        "layers": [_enc_layer_decls(cfg) for _ in range(cfg.n_layers)],
+        "final_ln": ParamDecl((d,), ("p_none",), init="ones", dtype=cfg.dtype),
+        "model_embed": ParamDecl((cfg.n_models, d), ("p_none", "p_embed"),
+                                 init="normal", scale=0.5, dtype=cfg.dtype),
+        "cap_w": ParamDecl((d,), ("p_embed",), init="scaled", dtype=cfg.dtype),
+        "cap_b": ParamDecl((), (), init="zeros", dtype=cfg.dtype),
+        "len_w": ParamDecl((d, cfg.n_buckets), ("p_embed", "p_none"),
+                           init="scaled", dtype=cfg.dtype),
+        "len_b": ParamDecl((cfg.n_buckets,), ("p_none",), init="zeros",
+                           dtype=cfg.dtype),
+    }
+
+
+def _ln(x, w, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * w
+
+
+def encode_queries(cfg: PredictorConfig, params: dict, tokens: jax.Array):
+    """tokens: (B, T) int32 -> pooled embedding (B, d)."""
+    b, t = tokens.shape
+    mask = tokens != tokenizer.PAD
+    x = params["tok_embed"][tokens] + params["pos_embed"][None, :t]
+    h, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    for lp in params["layers"]:
+        y = _ln(x, lp["ln1"])
+        qkv = jnp.einsum("btd,dghe->btghe", y, lp["wqkv"])
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+        s = jnp.einsum("bthe,bshe->bhts", q, k) / np.sqrt(hd)
+        s = jnp.where(mask[:, None, None, :], s, -1e30)
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhts,bshe->bthe", a, v)
+        x = x + jnp.einsum("bthe,hed->btd", o, lp["wo"])
+        y = _ln(x, lp["ln2"])
+        x = x + jax.nn.gelu(y @ lp["w1"]) @ lp["w2"]
+    x = _ln(x, params["final_ln"])
+    denom = jnp.maximum(mask.sum(-1, keepdims=True), 1)
+    return (x * mask[..., None]).sum(1) / denom  # mean-pool (B, d)
+
+
+def predict(cfg: PredictorConfig, params: dict, tokens: jax.Array):
+    """Returns (capability (B, M), length_probs (B, M, K))."""
+    q = encode_queries(cfg, params, tokens)              # (B, d)
+    inter = q[:, None, :] * params["model_embed"][None]  # (B, M, d)
+    cap = jax.nn.sigmoid(inter @ params["cap_w"] + params["cap_b"])
+    len_logits = inter @ params["len_w"] + params["len_b"]
+    return cap, jax.nn.softmax(len_logits, axis=-1)
+
+
+def loss_fn(cfg: PredictorConfig, params: dict, batch: Dict[str, jax.Array]):
+    q = encode_queries(cfg, params, batch["tokens"])
+    inter = q[:, None, :] * params["model_embed"][None]
+    cap_logit = inter @ params["cap_w"] + params["cap_b"]      # (B, M)
+    len_logits = inter @ params["len_w"] + params["len_b"]     # (B, M, K)
+    y = batch["correct"].astype(jnp.float32)
+    bce = jnp.mean(jnp.maximum(cap_logit, 0) - cap_logit * y
+                   + jnp.log1p(jnp.exp(-jnp.abs(cap_logit))))
+    lb = batch["len_bucket"]
+    ce = -jnp.mean(jnp.take_along_axis(
+        jax.nn.log_softmax(len_logits, -1), lb[..., None], axis=-1))
+    return bce + ce, {"bce": bce, "ce": ce}
+
+
+class TrainedPredictor:
+    """Convenience wrapper: fit on QAServe, predict capability & cost."""
+
+    def __init__(self, cfg: PredictorConfig):
+        self.cfg = cfg
+        self.params = None
+
+    def fit(self, ds: QAServe, *, steps: int = 300, batch: int = 64,
+            seed: int = 0, log_every: int = 0):
+        from repro.training.optim import AdamW
+        from repro.configs.base import TrainConfig
+
+        cfg = self.cfg
+        decls = predictor_decls(cfg)
+        params = init_params(decls, jax.random.PRNGKey(seed))
+        opt = AdamW(TrainConfig(learning_rate=cfg.lr, weight_decay=0.01,
+                                moment_dtype="fp32", grad_clip=1.0))
+        state = opt.init(params)
+        toks = tokenizer.encode_batch(ds.queries, cfg.max_len)
+        buckets = bucketize(ds.out_len, cfg.n_buckets)
+        rng = np.random.RandomState(seed)
+
+        @jax.jit
+        def step(params, state, tb, cb, lb):
+            (l, aux), g = jax.value_and_grad(
+                lambda p: loss_fn(cfg, p, {"tokens": tb, "correct": cb,
+                                           "len_bucket": lb}), has_aux=True)(params)
+            params, state, _ = opt.update(g, state, params)
+            return params, state, l
+
+        losses = []
+        for it in range(steps):
+            idx = rng.choice(ds.n, size=min(batch, ds.n), replace=False)
+            params, state, l = step(params, state,
+                                    jnp.asarray(toks[idx]),
+                                    jnp.asarray(ds.correct[idx]),
+                                    jnp.asarray(buckets[idx]))
+            losses.append(float(l))
+            if log_every and it % log_every == 0:
+                print(f"predictor step {it}: loss {float(l):.4f}")
+        self.params = params
+        return losses
+
+    def predict_arrays(self, ds: QAServe):
+        """Returns (capability (N,M), expected_out_len (N,M), cost (N,M))."""
+        toks = jnp.asarray(tokenizer.encode_batch(ds.queries, self.cfg.max_len))
+        cap, len_probs = jax.jit(lambda t: predict(self.cfg, self.params, t))(toks)
+        cap = np.asarray(cap)
+        exp_len = bucket_expectation(np.asarray(len_probs).reshape(
+            ds.n * ds.m, -1), self.cfg.n_buckets).reshape(ds.n, ds.m)
+        pin = np.array([p.price_in for p in ds.pool])
+        pout = np.array([p.price_out for p in ds.pool])
+        cost = (ds.input_len[:, None] * pin + exp_len * pout) / 1000.0
+        return cap, exp_len, cost
+
+    def eval_accuracy(self, ds: QAServe) -> Dict[str, float]:
+        cap, exp_len, _ = self.predict_arrays(ds)
+        cap_acc = float(((cap > 0.5) == (ds.correct > 0)).mean())
+        pred_b = bucketize(exp_len, self.cfg.n_buckets)
+        true_b = bucketize(ds.out_len, self.cfg.n_buckets)
+        exact = float((pred_b == true_b).mean())
+        within1 = float((np.abs(pred_b - true_b) <= 1).mean())
+        return {"capability_acc": cap_acc, "bucket_exact": exact,
+                "bucket_within1": within1}

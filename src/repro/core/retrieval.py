@@ -1,0 +1,93 @@
+"""ECCOS-R: retrieval-based predictor (paper §3.1, Eq. 5).
+
+Historical queries live in a vector store; for a new query the top-k cosine
+neighbours vote: predicted capability / output length are the neighbour means
+per model. TPU-native: the store is an (N_db, d) matrix sharded over the
+'model' mesh axis, similarity is one matmul, top-k is exact (no ANN) — the
+`topk_retrieval` Pallas kernel fuses sim+topk over VMEM tiles at scale.
+
+The featurizer is a deterministic hashed bag-of-words random projection (no
+training needed, mirroring the paper's frozen embedding model role).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import logical_shard
+from repro.data import tokenizer
+from repro.data.qaserve import QAServe
+
+
+def featurize(texts, d: int = 256, seed: int = 7) -> np.ndarray:
+    """Hashed bag-of-words -> fixed random projection -> L2 normalize."""
+    toks = tokenizer.encode_batch(texts, max_len=64)
+    bow = np.zeros((len(texts), tokenizer.VOCAB), np.float32)
+    for i, row in enumerate(toks):
+        for t in row:
+            if t > tokenizer.CLS:
+                bow[i, t] += 1.0
+    proj = np.random.RandomState(seed).randn(tokenizer.VOCAB, d).astype(
+        np.float32) / np.sqrt(d)
+    emb = bow @ proj
+    return emb / np.maximum(np.linalg.norm(emb, axis=1, keepdims=True), 1e-6)
+
+
+from functools import partial
+
+
+@partial(jax.jit, static_argnames=("k",))
+def cosine_topk(store: jax.Array, queries: jax.Array, k: int = 8):
+    """store (N_db, d) L2-normalized; queries (B, d). Returns (vals, idx)."""
+    store = logical_shard(store, "db_rows", "db_dim")
+    sims = queries @ store.T           # (B, N_db)
+    sims = logical_shard(sims, "queries", "db_rows")
+    return jax.lax.top_k(sims, k)
+
+
+class RetrievalPredictor:
+    def __init__(self, d: int = 256, k: int = 8, use_kernel: bool = False):
+        self.d = d
+        self.k = k
+        self.use_kernel = use_kernel
+        self.store: Optional[jnp.ndarray] = None
+        self.correct: Optional[np.ndarray] = None
+        self.out_len: Optional[np.ndarray] = None
+        self.pool = None
+
+    def fit(self, ds: QAServe):
+        self.store = jnp.asarray(featurize(ds.queries, self.d))
+        self.correct = ds.correct.astype(np.float32)
+        self.out_len = ds.out_len.astype(np.float32)
+        self.pool = ds.pool
+        return self
+
+    def predict_arrays(self, ds: QAServe):
+        """Returns (capability (N,M), expected_out_len (N,M), cost (N,M))."""
+        q = jnp.asarray(featurize(ds.queries, self.d))
+        if self.use_kernel:
+            from repro.kernels.topk_retrieval.ops import topk_retrieval
+            vals, idx = topk_retrieval(self.store, q, self.k)
+        else:
+            vals, idx = cosine_topk(self.store, q, self.k)
+        idx = np.asarray(idx)
+        cap = self.correct[idx].mean(axis=1)        # (N, k, M) -> (N, M)
+        exp_len = self.out_len[idx].mean(axis=1)
+        pin = np.array([p.price_in for p in ds.pool])
+        pout = np.array([p.price_out for p in ds.pool])
+        cost = (ds.input_len[:, None] * pin + exp_len * pout) / 1000.0
+        return np.asarray(cap), exp_len, cost
+
+    def eval_accuracy(self, ds: QAServe, n_buckets: int = 10) -> Dict[str, float]:
+        from repro.data.qaserve import bucketize
+        cap, exp_len, _ = self.predict_arrays(ds)
+        cap_acc = float(((cap > 0.5) == (ds.correct > 0)).mean())
+        pred_b = bucketize(exp_len, n_buckets)
+        true_b = bucketize(ds.out_len, n_buckets)
+        return {"capability_acc": cap_acc,
+                "bucket_exact": float((pred_b == true_b).mean()),
+                "bucket_within1": float((np.abs(pred_b - true_b) <= 1).mean())}

@@ -1,0 +1,87 @@
+"""OmniRouter facade: two-stage routing (predict → constrained optimize)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.qaserve import QAServe
+from .baselines import Policy
+from .optimizer import (primal_polish, repair_workload, solve_assignment,
+                        solve_budget)
+
+
+@dataclasses.dataclass
+class RouterConfig:
+    alpha: float = 0.75          # quality constraint (paper default)
+    budget: Optional[float] = None   # set -> budget-controllable mode
+    iters: int = 150
+    lr_quality: float = 4.0
+    lr_workload: float = 0.5
+    use_assign_kernel: bool = False
+    # beyond-paper robustness: tighten the predicted-quality constraint by a
+    # small margin during primal polish so prediction noise doesn't push the
+    # realized SR below alpha (optimizing to the boundary of a *predicted*
+    # constraint amplifies miscalibration)
+    alpha_margin: float = 0.03
+
+
+class OmniRouter(Policy):
+    """ECCOS with a pluggable predictor ('T' trained / 'R' retrieval)."""
+
+    def __init__(self, predictor, cfg: RouterConfig = RouterConfig(),
+                 name: str = "ECCOS"):
+        self.predictor = predictor
+        self.cfg = cfg
+        self.name = name
+        self.route_seconds = 0.0    # scheduling-overhead accounting (Fig. 3)
+        self.predict_seconds = 0.0
+
+    def prepare(self, train_ds: QAServe):
+        return self
+
+    def route(self, ds: QAServe, loads: np.ndarray,
+              counts: Optional[np.ndarray] = None, rng=None) -> np.ndarray:
+        t0 = time.perf_counter()
+        cap, _, cost = self.predictor.predict_arrays(ds)
+        t1 = time.perf_counter()
+        self.predict_seconds += t1 - t0
+        avail = np.asarray(loads, float)
+        if counts is not None:
+            avail = np.maximum(avail - counts, 0.0)
+        if self.cfg.use_assign_kernel:
+            from repro.kernels.lagrangian_assign.ops import solve_assignment_kernel
+            x, info = solve_assignment_kernel(
+                jnp.asarray(cost), jnp.asarray(cap), self.cfg.alpha,
+                jnp.asarray(avail), iters=self.cfg.iters,
+                lr_quality=self.cfg.lr_quality, lr_workload=self.cfg.lr_workload)
+        elif self.cfg.budget is not None:
+            x, info = solve_budget(jnp.asarray(cost), jnp.asarray(cap),
+                                   self.cfg.budget, jnp.asarray(avail),
+                                   iters=self.cfg.iters)
+        else:
+            x, info = solve_assignment(jnp.asarray(cost), jnp.asarray(cap),
+                                       self.cfg.alpha, jnp.asarray(avail),
+                                       iters=self.cfg.iters,
+                                       lr_quality=self.cfg.lr_quality,
+                                       lr_workload=self.cfg.lr_workload)
+        x = np.asarray(x)
+        lam1 = float(np.asarray(info.get("lambda1", 0.0)))
+        x = repair_workload(x, cost, cap, avail, lam1=lam1)
+        if self.cfg.budget is None:
+            x = primal_polish(x, cost, cap,
+                              min(self.cfg.alpha + self.cfg.alpha_margin, 1.0),
+                              avail)
+        self.route_seconds += time.perf_counter() - t1
+        return x
+
+
+def evaluate_assignment(ds: QAServe, x: np.ndarray) -> Dict[str, float]:
+    """True SR and true $ cost of an assignment (uses ground truth)."""
+    n = ds.n
+    sr = float(ds.correct[np.arange(n), x].mean())
+    cost = float(ds.cost_matrix()[np.arange(n), x].sum())
+    return {"success_rate": sr, "cost": cost}

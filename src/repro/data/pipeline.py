@@ -1,0 +1,70 @@
+"""Sharded training data pipeline: deterministic synthetic token streams,
+host->device placement with the run's batch sharding, and one-batch
+prefetch (double buffering) so input never serializes the step."""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def synthetic_batches(cfg: ModelConfig, shape: ShapeConfig, *, seed: int = 0,
+                      batch_override: Optional[int] = None,
+                      seq_override: Optional[int] = None) -> Iterator[Dict]:
+    """Infinite deterministic LM batches (token ids [+ frontend embeds])."""
+    b = batch_override or shape.global_batch
+    s = seq_override or shape.seq_len
+    step = 0
+    while True:
+        rng = np.random.RandomState((seed * 1_000_003 + step) % (2**31 - 1))
+        out: Dict = {}
+        if cfg.family == "encdec":
+            out["embeds"] = rng.randn(b, s, cfg.d_model).astype(np.float32)
+            out["tokens"] = rng.randint(0, cfg.vocab_size, (b, s)).astype(np.int32)
+        elif cfg.frontend != "none":
+            flen = min(cfg.frontend_len, s // 2)
+            out["embeds"] = rng.randn(b, flen, cfg.d_model).astype(np.float32)
+            out["tokens"] = rng.randint(0, cfg.vocab_size,
+                                        (b, s - flen)).astype(np.int32)
+        else:
+            out["tokens"] = rng.randint(0, cfg.vocab_size, (b, s)).astype(np.int32)
+        yield out
+        step += 1
+
+
+class Prefetcher:
+    """Places batches on device (optionally sharded) one step ahead."""
+
+    def __init__(self, it: Iterator[Dict], shardings=None, depth: int = 2):
+        self.it = it
+        self.shardings = shardings
+        self.q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = False
+        self.t = threading.Thread(target=self._work, daemon=True)
+        self.t.start()
+
+    def _place(self, batch):
+        if self.shardings is None:
+            return jax.tree.map(jax.numpy.asarray, batch)
+        return jax.tree.map(lambda a, s: jax.device_put(a, s), batch,
+                            self.shardings)
+
+    def _work(self):
+        for batch in self.it:
+            if self._stop:
+                return
+            self.q.put(self._place(batch))
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        return self.q.get()
+
+    def close(self):
+        self._stop = True

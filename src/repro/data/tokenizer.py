@@ -1,0 +1,25 @@
+"""Deterministic hash tokenizer for the routing predictor (no external vocab)."""
+from __future__ import annotations
+
+import hashlib
+from typing import List
+
+import numpy as np
+
+VOCAB = 8192
+PAD, CLS = 0, 1
+
+
+def _tok(word: str) -> int:
+    h = int(hashlib.md5(word.encode()).hexdigest()[:8], 16)
+    return 2 + (h % (VOCAB - 2))
+
+
+def encode(text: str, max_len: int = 64) -> np.ndarray:
+    ids = [CLS] + [_tok(w) for w in text.lower().split()][: max_len - 1]
+    ids = ids + [PAD] * (max_len - len(ids))
+    return np.array(ids, dtype=np.int32)
+
+
+def encode_batch(texts: List[str], max_len: int = 64) -> np.ndarray:
+    return np.stack([encode(t, max_len) for t in texts])

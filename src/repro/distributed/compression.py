@@ -1,0 +1,58 @@
+"""Gradient compression for cross-pod reduction.
+
+``compressed_psum`` quantizes to int8 with per-block fp32 scales before the
+all-reduce and keeps an error-feedback residual so compression error doesn't
+accumulate (1-bit-Adam-style EF). Wire format inside XLA remains int32 for the
+reduce itself; on-TPU the win is realized by the bf16 variant (ICI reduces
+natively in bf16, halving cross-pod bytes vs fp32 — visible in the dry-run
+collective table).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_BLOCK = 256
+
+
+def _quant(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % _BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _BLOCK)
+    scale = jnp.maximum(jnp.max(jnp.abs(blocks), axis=1) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def compressed_psum(x: jax.Array, axis_name: str,
+                    error: Optional[jax.Array] = None, *,
+                    method: str = "int8"):
+    """All-reduce with compression + error feedback.
+
+    Returns (mean-reduced x, new_error). ``error`` carries the residual the
+    quantizer dropped last step (same shape as x; None -> zeros).
+    """
+    if error is None:
+        error = jnp.zeros_like(x, jnp.float32)
+    target = x.astype(jnp.float32) + error
+    if method == "bf16":
+        sent = target.astype(jnp.bfloat16)
+        reduced = jax.lax.pmean(sent, axis_name).astype(jnp.float32)
+        new_error = target - sent.astype(jnp.float32)
+        return reduced, new_error
+    q, scale = _quant(target)
+    local = _dequant(q, scale, x.shape)
+    new_error = target - local
+    reduced = jax.lax.pmean(local, axis_name)
+    return reduced, new_error

@@ -1,0 +1,119 @@
+"""Sharded, async, elastic checkpointing (no orbax offline).
+
+Format: one ``.npz`` per checkpoint holding every leaf (keyed by flattened
+tree path) + ``manifest.json`` (step, keys, shapes, dtypes). Arrays are
+gathered to host on save; restore re-places them under *any* mesh/sharding
+(elastic re-mesh: the checkpoint is layout-agnostic — restore shards to the
+current topology, so a 512-chip checkpoint restores onto 256 chips and vice
+versa). Saves run on a background thread (training never blocks on I/O).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy can't serialize bfloat16 — round-trip through a uint16 view with the
+# true dtype recorded in the manifest
+_VIEW_DTYPES = {"bfloat16": (ml_dtypes.bfloat16, np.uint16)}
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == ml_dtypes.bfloat16:
+            arr = arr.view(np.uint16)
+        flat[key] = arr
+    return flat
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"ckpt_{step:08d}")
+
+    def save(self, step: int, tree, *, blocking: bool = False):
+        host = _flatten(tree)           # device->host happens on caller thread
+
+        def _write():
+            path = self._path(step)
+            np.savez(path + ".npz", **host)
+            manifest = {
+                "step": step,
+                "keys": list(host.keys()),
+                "shapes": {k: list(v.shape) for k, v in host.items()},
+                "dtypes": {k: str(v.dtype) for k, v in host.items()},
+            }
+            with open(path + ".json", "w") as f:
+                json.dump(manifest, f)
+            self._gc()
+
+        self.wait()
+        if blocking:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.list_steps()
+        for s in steps[:-self.keep]:
+            for ext in (".npz", ".json"):
+                try:
+                    os.remove(self._path(s) + ext)
+                except OSError:
+                    pass
+
+    def list_steps(self):
+        out = []
+        for f in os.listdir(self.dir):
+            if f.startswith("ckpt_") and f.endswith(".json"):
+                out.append(int(f[5:-5]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like_tree, *, step: Optional[int] = None,
+                shardings=None):
+        """Restore into the structure of ``like_tree``; if ``shardings`` (a
+        matching tree of jax.sharding.Sharding) is given, each leaf is placed
+        sharded — this is the elastic re-mesh path."""
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        data = np.load(self._path(step) + ".npz")
+        paths, treedef = jax.tree_util.tree_flatten_with_path(like_tree)
+        leaves = []
+        sh_leaves = (jax.tree_util.tree_leaves(shardings)
+                     if shardings is not None else [None] * len(paths))
+        for (path, like), sh in zip(paths, sh_leaves):
+            key = "/".join(str(p) for p in path)
+            arr = data[key]
+            like_dt = np.dtype(like.dtype)
+            if arr.dtype == np.uint16 and like_dt == ml_dtypes.bfloat16:
+                arr = arr.view(ml_dtypes.bfloat16)
+            if sh is not None:
+                leaves.append(jax.device_put(arr, sh))
+            else:
+                leaves.append(jax.numpy.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, leaves), step

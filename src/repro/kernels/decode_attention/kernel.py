@@ -1,0 +1,83 @@
+"""Split-KV flash-decode Pallas kernel.
+
+Grid: (B, K, n_splits). Each split computes attention of one decode token
+against its KV slice and emits partial (o·l, m, l) — the same merge triple the
+cross-shard ``psum`` combine uses in the SP-decode path (DESIGN.md §4), so
+this kernel is both the per-device decode op and the building block of the
+sequence-sharded 500k decode. ops.py performs the split/shard merge.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, pos_ref, on_ref, m_ref, l_ref, *,
+            bs: int, window: int, scale: float):
+    s_idx = pl.program_id(2)
+    start = s_idx * bs
+    q = q_ref[0, 0].astype(jnp.float32) * scale      # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)           # (BS, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    pos = pos_ref[0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (G, BS)
+    kv_pos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = kv_pos < pos
+    if window > 0:
+        valid &= kv_pos > pos - 1 - window
+    s = jnp.where(valid, s, NEG_INF)
+    m = s.max(axis=1)                                 # (G,)
+    p = jnp.exp(s - m[:, None])
+    l = p.sum(axis=1)
+    o = jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())))
+    on_ref[0, 0, 0] = o.astype(on_ref.dtype)          # o·l numerator (G, D)
+    m_ref[0, 0, 0] = m.astype(m_ref.dtype)
+    l_ref[0, 0, 0] = l.astype(l_ref.dtype)
+
+
+def decode_attention_kernel(q, k_cache, v_cache, pos, *, window: int = 0,
+                            bs: int = 512, interpret: bool = True):
+    """q: (B,1,H,D); caches (B,T,K,D); pos scalar int32.
+
+    Returns partials (o_num (B,K,S,G,D), m (B,K,S,G), l (B,K,S,G)) where S is
+    the number of KV splits — merged by ops.merge_partials.
+    """
+    b, _, h, d = q.shape
+    t, kh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    bs = min(bs, t)
+    assert t % bs == 0
+    ns = t // bs
+
+    qT = q.reshape(b, kh, g, d)                      # (B, K, G, D)
+    kT = k_cache.transpose(0, 1, 2, 3)               # (B, T, K, D)
+    pos_arr = jnp.full((1,), pos, jnp.int32)
+
+    kernel = functools.partial(_kernel, bs=bs, window=window, scale=d ** -0.5)
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid=(b, kh, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, k_, s_: (b_, k_, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d), lambda b_, k_, s_: (b_, s_, k_, 0)),
+            pl.BlockSpec((1, bs, 1, d), lambda b_, k_, s_: (b_, s_, k_, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, g, d), lambda b_, k_, s_: (b_, k_, s_, 0, 0)),
+            pl.BlockSpec((1, 1, 1, g), lambda b_, k_, s_: (b_, k_, s_, 0)),
+            pl.BlockSpec((1, 1, 1, g), lambda b_, k_, s_: (b_, k_, s_, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kh, ns, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, kh, ns, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, kh, ns, g), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qT, kT, v_cache, pos_arr)
+    return o, m, l

@@ -1,0 +1,35 @@
+"""Split-KV decode: kernel partials + logsumexp merge (jit wrapper)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import decode_attention_kernel
+
+
+def merge_partials(o, m, l):
+    """Merge per-split (o·l-normalized numerators, m, l) over the split axis.
+
+    o: (B,K,S,G,D); m/l: (B,K,S,G). The identical formula merges cross-device
+    partials in the sequence-sharded decode path.
+    """
+    m_glob = m.max(axis=2, keepdims=True)                   # (B,K,1,G)
+    corr = jnp.exp(m - m_glob)
+    l_glob = (l * corr).sum(axis=2)                         # (B,K,G)
+    o_glob = (o * corr[..., None]).sum(axis=2)              # (B,K,G,D)
+    return o_glob / jnp.maximum(l_glob, 1e-30)[..., None]
+
+
+@partial(jax.jit, static_argnames=("window", "bs", "interpret"))
+def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0,
+                     bs: int = 512, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, _, h, d = q.shape
+    o, m, l = decode_attention_kernel(q, k_cache, v_cache, pos,
+                                      window=window, bs=bs,
+                                      interpret=interpret)
+    out = merge_partials(o, m, l)                           # (B,K,G,D)
+    return out.reshape(b, 1, h, d).astype(q.dtype)

@@ -1,0 +1,22 @@
+"""Oracle for split-KV flash-decode."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos, *, window: int = 0):
+    """q: (B,1,H,D); caches (B,T,K,D); pos: valid length. fp32 softmax."""
+    b, _, h, d = q.shape
+    t, kh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    qf = q.reshape(b, kh, g, d).astype(jnp.float32) * (d ** -0.5)
+    s = jnp.einsum("bkgd,btkd->bkgt", qf, k_cache.astype(jnp.float32))
+    kv = jnp.arange(t)
+    valid = kv < pos
+    if window > 0:
+        valid = valid & (kv > pos - 1 - window)
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, 1, h, d).astype(q.dtype)

@@ -1,0 +1,19 @@
+"""Jitted wrapper: Pallas flash attention with interpret fallback on CPU."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import flash_attention_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "bq", "bk"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 128, bk: int = 256):
+    return flash_attention_kernel(q, k, v, causal=causal, window=window,
+                                  bq=bq, bk=bk, interpret=not _on_tpu())

@@ -1,0 +1,84 @@
+"""Fused Lagrangian assignment step (ECCOS optimizer inner loop, Eq. 11-12).
+
+One pass over a (BQ, M) tile of the cost/quality matrices computes the
+reduced-cost argmin, the per-model load histogram contribution, and the
+chosen-pair quality/cost sums — everything the dual update (Eq. 9-10) needs —
+without materializing the (N, M) score matrix in HBM. Grid over query blocks;
+the histogram output block is revisited (accumulated) across the grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(c_ref, a_ref, lam_ref, x_ref, cnt_ref, sums_ref, *,
+            n: int, m: int, bq: int):
+    iq = pl.program_id(0)
+
+    @pl.when(iq == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+
+    c = c_ref[...].astype(jnp.float32)                   # (BQ, M)
+    a = a_ref[...].astype(jnp.float32)
+    lam1 = lam_ref[0]
+    lam2 = lam_ref[1:1 + m]
+    scores = c - lam1 * a / n + lam2[None, :]
+    x = jnp.argmin(scores, axis=1).astype(jnp.int32)     # (BQ,)
+    x_ref[...] = x
+    onehot = (x[:, None] == jax.lax.broadcasted_iota(jnp.int32, (bq, m), 1))
+    onehot_f = onehot.astype(jnp.float32)
+    cnt_ref[...] += onehot_f.sum(axis=0)
+    qsum = (a * onehot_f).sum()
+    csum = (c * onehot_f).sum()
+    sums_ref[0] += qsum
+    sums_ref[1] += csum
+
+
+def assign_step_kernel(cost, quality, lam1, lam2, *, bq: int = 256,
+                       interpret: bool = True):
+    """cost/quality (N, M); lam1 scalar; lam2 (M,).
+
+    Returns (x (N,), counts (M,), qsum, csum)."""
+    n, m = cost.shape
+    bq = min(bq, n)
+    pad = (-n) % bq
+    if pad:
+        # zero-pad both matrices: padded rows argmin to model 0 with zero
+        # cost/quality contribution; their histogram counts are stripped below
+        cost = jnp.concatenate([cost, jnp.zeros((pad, m), cost.dtype)], axis=0)
+        quality = jnp.concatenate([quality, jnp.zeros((pad, m), quality.dtype)], 0)
+    npad = cost.shape[0]
+    lam = jnp.concatenate([jnp.reshape(lam1, (1,)), lam2]).astype(jnp.float32)
+
+    kernel = functools.partial(_kernel, n=n, m=m, bq=bq)
+    x, counts, sums = pl.pallas_call(
+        kernel,
+        grid=(npad // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, m), lambda i: (i, 0)),
+            pl.BlockSpec((bq, m), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((npad,), jnp.int32),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+            jax.ShapeDtypeStruct((2,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cost, quality, lam)
+    # strip padded rows from the histogram (their cost/quality sums are 0)
+    if pad:
+        extra = jnp.zeros((m,), jnp.float32).at[x[n:]].add(1.0)
+        counts = counts - extra
+    return x[:n], counts, sums[0], sums[1]

@@ -1,0 +1,45 @@
+"""Kernel-backed ECCOS dual solver: same contract as core.optimizer.solve_assignment."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import assign_step_kernel
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def solve_assignment_kernel(cost, quality, alpha, loads, *, iters: int = 150,
+                            lr_quality: float = 4.0, lr_workload: float = 0.5):
+    n, m = cost.shape
+    cost = cost.astype(jnp.float32)
+    quality = quality.astype(jnp.float32)
+    loads = loads.astype(jnp.float32)
+    interp = jax.default_backend() != "tpu"
+
+    def body(t, carry):
+        lam1, lam2, best_cost, best_x, found = carry
+        x, counts, qsum, csum = assign_step_kernel(
+            cost, quality, lam1, lam2, interpret=interp)
+        q = qsum / n
+        feasible = (q >= alpha) & jnp.all(counts <= loads)
+        better = feasible & (csum < best_cost)
+        best_cost = jnp.where(better, csum, best_cost)
+        best_x = jnp.where(better, x, best_x)
+        found = found | feasible
+        step = 1.0 / jnp.sqrt(1.0 + t.astype(jnp.float32))
+        lam1 = jnp.maximum(lam1 + lr_quality * n * step * (alpha - q), 0.0)
+        lam2 = jnp.maximum(lam2 + lr_workload * step * (counts - loads), 0.0)
+        return lam1, lam2, best_cost, best_x, found
+
+    init = (jnp.zeros(()), jnp.zeros((m,)), jnp.asarray(jnp.inf),
+            jnp.zeros((n,), jnp.int32), jnp.asarray(False))
+    lam1, lam2, best_cost, best_x, found = jax.lax.fori_loop(0, iters, body, init)
+    x_last, counts, qsum, csum = assign_step_kernel(
+        cost, quality, lam1, lam2, interpret=interp)
+    x = jnp.where(found, best_x, x_last)
+    info = {"lambda1": lam1, "lambda2": lam2, "feasible": found,
+            "cost": jnp.where(found, best_cost, csum), "quality": qsum / n,
+            "counts": counts}
+    return x, info

@@ -1,0 +1,15 @@
+"""Oracle for the fused Lagrangian assignment step (paper Eq. 11-12)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def assign_step_ref(cost, quality, lam1, lam2, n):
+    """Reduced-cost argmin + per-model load histogram + quality sum."""
+    scores = cost - lam1 * quality / n + lam2[None, :]
+    x = jnp.argmin(scores, axis=1)
+    m = cost.shape[1]
+    counts = jnp.zeros((m,), jnp.float32).at[x].add(1.0)
+    qsum = jnp.take_along_axis(quality, x[:, None], axis=1).sum()
+    csum = jnp.take_along_axis(cost, x[:, None], axis=1).sum()
+    return x, counts, qsum, csum

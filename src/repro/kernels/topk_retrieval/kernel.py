@@ -1,0 +1,88 @@
+"""Fused cosine-similarity + running top-k Pallas kernel (ECCOS-R hot loop).
+
+Grid: (n_q_blocks, n_db_tiles), db tiles innermost. Each step computes the
+(BQ, TILE) similarity block on the MXU, then folds it into a running top-k
+held in VMEM scratch via k iterations of (max, argmax, mask) — k is small
+(4..64 per the paper's Table 4) so the fold is VPU-cheap relative to the
+matmul. The vector store never leaves HBM more than once per query block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, db_ref, vals_ref, idx_ref, v_scr, i_scr, *,
+            k: int, tile: int, n_tiles: int, bq: int):
+    it = pl.program_id(1)
+
+    @pl.when(it == 0)
+    def _init():
+        v_scr[...] = jnp.full_like(v_scr, NEG_INF)
+        i_scr[...] = jnp.zeros_like(i_scr)
+
+    q = q_ref[...]                                     # (BQ, D)
+    db = db_ref[...]                                   # (TILE, D)
+    sims = jax.lax.dot_general(q, db, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # (BQ, TILE)
+    base = it * tile
+    col = base + jax.lax.broadcasted_iota(jnp.int32, sims.shape, 1)
+
+    # fold tile into running top-k: k rounds of extract-max
+    cur_v = jnp.concatenate([v_scr[...], sims], axis=1)          # (BQ, k+TILE)
+    cur_i = jnp.concatenate([i_scr[...], col], axis=1)
+    for r in range(k):
+        m = cur_v.max(axis=1)
+        am = cur_v.argmax(axis=1)
+        v_scr[:, r] = m
+        i_scr[:, r] = jnp.take_along_axis(cur_i, am[:, None], axis=1)[:, 0]
+        cur_v = cur_v.at[jnp.arange(cur_v.shape[0]), am].set(NEG_INF)
+
+    @pl.when(it == n_tiles - 1)
+    def _finish():
+        vals_ref[...] = v_scr[...]
+        idx_ref[...] = i_scr[...]
+
+
+def topk_retrieval_kernel(store, queries, k: int, *, bq: int = 128,
+                          tile: int = 512, interpret: bool = True):
+    """store (N_db, d); queries (B, d). Returns (vals (B,k), idx (B,k))."""
+    n_db, d = store.shape
+    b = queries.shape[0]
+    pad_b = (-b) % bq
+    if pad_b:
+        queries = jnp.pad(queries, ((0, pad_b), (0, 0)))
+    bp = queries.shape[0]
+    tile = min(tile, n_db)
+    assert n_db % tile == 0, (n_db, tile)
+    n_tiles = n_db // tile
+
+    kernel = functools.partial(_kernel, k=k, tile=tile, n_tiles=n_tiles, bq=bq)
+    vals, idx = pl.pallas_call(
+        kernel,
+        grid=(bp // bq, n_tiles),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda iq, it: (iq, 0)),
+            pl.BlockSpec((tile, d), lambda iq, it: (it, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, k), lambda iq, it: (iq, 0)),
+            pl.BlockSpec((bq, k), lambda iq, it: (iq, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, k), jnp.float32),
+            jax.ShapeDtypeStruct((bp, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, k), jnp.float32),
+            pltpu.VMEM((bq, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries, store)
+    return vals[:b], idx[:b]

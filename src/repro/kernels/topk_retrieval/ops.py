@@ -1,0 +1,14 @@
+"""Jit wrapper for the fused retrieval kernel (interpret on CPU)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import topk_retrieval_kernel
+
+
+@partial(jax.jit, static_argnames=("k", "bq", "tile"))
+def topk_retrieval(store, queries, k: int, *, bq: int = 128, tile: int = 512):
+    return topk_retrieval_kernel(store, queries, k, bq=bq, tile=tile,
+                                 interpret=jax.default_backend() != "tpu")

@@ -1,0 +1,11 @@
+"""Oracle for fused cosine-similarity top-k retrieval."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_retrieval_ref(store, queries, k: int):
+    """store (N_db, d) L2-normalized; queries (B, d). Returns (vals, idx)."""
+    sims = queries.astype(jnp.float32) @ store.astype(jnp.float32).T
+    return jax.lax.top_k(sims, k)

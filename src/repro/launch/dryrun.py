@@ -1,0 +1,284 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on the
+production mesh with 512 placeholder host devices, and record memory / cost /
+collective analyses for the roofline report.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] \
+      --out results/dryrun.json
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis.hlo_static import analyze as hlo_analyze
+from repro.analysis.roofline import (collective_bytes, model_flops,
+                                     roofline_terms)
+from repro.common import param_specs, use_mesh
+from repro.configs import (cell_applicable, get_config, get_shape, list_archs,
+                           SHAPES)
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.distributed.sharding import dp_degree, rules_for
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.models.zoo import cache_specs, input_shapes
+from repro.training import Trainer
+
+
+def tcfg_for(cfg: ModelConfig, shape: ShapeConfig, mesh) -> TrainConfig:
+    """Microbatch / optimizer-memory policy per model size (DESIGN.md §4)."""
+    dp = dp_degree(mesh)
+    n = cfg.active_params or 1
+    if n >= 50e9:
+        per_dev = 1
+    elif n >= 10e9:
+        per_dev = 2
+    elif n >= 2e9:
+        per_dev = 4
+    else:
+        per_dev = 8
+    g = max(1, shape.global_batch // (dp * per_dev))
+    while shape.global_batch % g or (shape.global_batch // g) % dp:
+        g -= 1
+    moment = "int8" if n >= 10e9 else "fp32"
+    # hoist FSDP gathers when the gathered non-expert weight set fits HBM
+    # (MoE archs keep experts EP-sharded, so their gathered set is small;
+    # dense archs <= ~25B fit a TP-16 copy alongside the training state)
+    hoist = (cfg.n_experts > 0) or n <= 25e9
+    return TrainConfig(microbatches=g, moment_dtype=moment, accum_dtype="bf16",
+                       hoist_gather=hoist)
+
+
+def _shardify(tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def _struct_with(tree_structs, tree_shardings):
+    return jax.tree.map(
+        lambda st, sh: jax.ShapeDtypeStruct(st.shape, st.dtype, sharding=sh),
+        tree_structs, tree_shardings,
+    )
+
+
+def _analytic_memory(cfg, shape, mesh, rules, model, tcfg=None):
+    from repro.analysis.analytic import memory_term
+    decls = model.decls()
+    cache_struct = cache_spec = None
+    if shape.is_decode:
+        inputs = input_shapes(cfg, shape)
+        cache_struct = inputs["cache"]
+        cache_spec = cache_specs(cache_struct, rules)
+    return memory_term(cfg, shape, mesh, rules, decls, cache_struct,
+                       cache_spec, tcfg)
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               overrides: Dict[str, Any] | None = None):
+    """Returns (lowered, meta) for one dry-run cell."""
+    cfg = get_config(arch)
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mode = {"train": "train", "prefill": "prefill", "decode": "decode"}[shape.kind]
+    rules = rules_for(cfg, mesh, mode, global_batch=shape.global_batch)
+    model = build_model(cfg)
+    inputs = input_shapes(cfg, shape)
+
+    with use_mesh(mesh, rules):
+        if shape.kind == "train":
+            tcfg = tcfg_for(cfg, shape, mesh)
+            gather_specs = None
+            if tcfg.hoist_gather:
+                serve_rules = rules_for(cfg, mesh, "prefill",
+                                        global_batch=shape.global_batch)
+                gather_specs = param_specs(model.decls(), serve_rules)
+            trainer = Trainer(model, tcfg, gather_specs=gather_specs)
+            state = trainer.abstract_state()
+            state_specs = trainer.state_specs(rules)
+            state_sh = _shardify(state_specs, mesh)
+            state_structs = _struct_with(state, state_sh)
+            batch_specs = {k: rules.spec(("batch",) + (None,) * (v.ndim - 1))
+                           for k, v in inputs.items()}
+            batch_sh = _shardify(batch_specs, mesh)
+            batch_structs = _struct_with(inputs, batch_sh)
+            fn = jax.jit(trainer.train_step,
+                         in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh, None),
+                         donate_argnums=(0,))
+            lowered = fn.lower(state_structs, batch_structs)
+            meta = {"microbatches": tcfg.microbatches,
+                    "moment_dtype": tcfg.moment_dtype}
+        else:
+            decls = model.decls()
+            p_specs = param_specs(decls, rules)
+            p_sh = _shardify(p_specs, mesh)
+            from repro.common.params import param_structs
+            p_structs = _struct_with(param_structs(decls), p_sh)
+            if shape.kind == "prefill":
+                in_sh: Dict[str, Any] = {}
+                for k, v in inputs.items():
+                    spec = rules.spec(("batch",) + (None,) * (v.ndim - 1))
+                    in_sh[k] = NamedSharding(mesh, spec)
+                in_structs = _struct_with(inputs, in_sh)
+
+                def prefill_fn(params, inp):
+                    return model.prefill(params, inp.get("tokens"),
+                                         inp.get("embeds"))
+
+                fn = jax.jit(prefill_fn, in_shardings=(p_sh, in_sh))
+                lowered = fn.lower(p_structs, in_structs)
+            else:  # decode
+                c_specs = cache_specs(inputs["cache"], rules)
+                c_sh = _shardify(c_specs, mesh)
+                c_structs = _struct_with(inputs["cache"], c_sh)
+                t_sh = NamedSharding(mesh, rules.spec(("batch", None)))
+                t_struct = jax.ShapeDtypeStruct(inputs["token"].shape, jnp.int32,
+                                                sharding=t_sh)
+
+                def decode_fn(params, cache, token):
+                    return model.decode_step(params, cache, token)
+
+                fn = jax.jit(decode_fn,
+                             in_shardings=(p_sh, c_sh, t_sh),
+                             out_shardings=(c_sh, None),
+                             donate_argnums=(1,))
+                lowered = fn.lower(p_structs, c_structs, t_struct)
+            meta = {}
+    meta.update({"mode": mode, "mesh": "2x16x16" if multi_pod else "16x16"})
+    meta["analytic_memory"] = _analytic_memory(
+        cfg, shape, mesh, rules, model,
+        tcfg_for(cfg, shape, mesh) if shape.kind == "train" else None)
+    return lowered, cfg, shape, meta
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool) -> Dict[str, Any]:
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if not cell_applicable(arch, shape_name):
+        rec["status"] = "skipped"
+        rec["reason"] = "long_500k inapplicable (pure full-attention or enc-dec audio; DESIGN.md §6)"
+        return rec
+    t0 = time.time()
+    try:
+        lowered, cfg, shape, meta = lower_cell(arch, shape_name, multi_pod=multi_pod)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        txt = compiled.as_text()
+        static = hlo_analyze(txt)  # loop-trip-scaled per-device costs
+        del txt
+        flops_pd = float(static.dot_flops)
+        # memory term: analytic buffer-set model (HLO bytes on the CPU backend
+        # carry copy/layout artifacts a TPU build doesn't have — see
+        # analysis/analytic.py); HLO-parsed traffic kept as a diagnostic.
+        analytic = meta.pop("analytic_memory")
+        bytes_pd = float(analytic["memory_bytes_pd"])
+        coll_pd = float(static.collective_bytes)
+        coll = {k: v for k, v in static.collectives.items()}
+        coll["count"] = static.dots
+        chips = 512 if multi_pod else 256
+        tokens = shape.global_batch * (shape.seq_len if shape.kind == "train" else 1)
+        if shape.kind == "prefill":
+            tokens = shape.global_batch * shape.seq_len
+        mf = model_flops(cfg.active_params, tokens, training=(shape.kind == "train"))
+        rec.update({
+            "status": "ok",
+            "meta": meta,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "flops_per_device": flops_pd,
+            "bytes_per_device": bytes_pd,
+            "collective_bytes_per_device": coll_pd,
+            "collectives": coll,
+            "cost_analysis_raw": {"flops": float(cost.get("flops", -1.0)),
+                                  "bytes": float(cost.get("bytes accessed", -1.0))},
+            "hlo_traffic_bytes_diag": float(static.traffic_bytes),
+            "analytic_memory": {k: float(v) for k, v in analytic.items()},
+            "memory": {
+                k: int(getattr(mem, k, -1)) for k in
+                ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes")
+            },
+            "roofline": roofline_terms(flops_pd, bytes_pd, coll_pd),
+            "model_flops_total": mf,
+            "useful_flops_ratio": (mf / (flops_pd * chips)) if flops_pd > 0 else None,
+        })
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    done: Dict[str, Any] = {}
+    if args.out and os.path.exists(args.out) and not args.force:
+        with open(args.out) as f:
+            done = json.load(f)
+
+    for a, s, mp in cells:
+        key = f"{a}|{s}|{'multi' if mp else 'single'}"
+        if key in done and done[key].get("status") in ("ok", "skipped"):
+            print(f"[cached] {key}", flush=True)
+            continue
+        print(f"[run] {key}", flush=True)
+        rec = run_cell(a, s, multi_pod=mp)
+        done[key] = rec
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            r = rec["roofline"]
+            extra = (f" dom={r['dominant']} c={r['compute_s']:.3e}s "
+                     f"m={r['memory_s']:.3e}s x={r['collective_s']:.3e}s "
+                     f"lower={rec['lower_s']}s compile={rec['compile_s']}s")
+        elif status == "error":
+            extra = " " + rec["error"][:200]
+        print(f"[{status}] {key}{extra}", flush=True)
+        if args.out:
+            os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+            with open(args.out, "w") as f:
+                json.dump(done, f, indent=1)
+    n_ok = sum(1 for r in done.values() if r.get("status") == "ok")
+    n_skip = sum(1 for r in done.values() if r.get("status") == "skipped")
+    n_err = sum(1 for r in done.values() if r.get("status") == "error")
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from .transformer import DecoderLM  # noqa: F401
+from .encdec import EncDecLM  # noqa: F401
+from .zoo import (  # noqa: F401
+    build_model,
+    cache_specs,
+    concrete_inputs,
+    input_shapes,
+    param_count_estimate,
+)

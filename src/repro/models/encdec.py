@@ -1,0 +1,122 @@
+"""Encoder–decoder LM (seamless-m4t family).
+
+Encoder consumes frontend embeddings (audio frames — the modality stub);
+decoder is causal with cross-attention into the encoder output. Reuses the
+segment machinery from :mod:`transformer`.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import init_params, logical_shard
+from repro.configs.base import ModelConfig
+from .layers import chunked_softmax_xent, embed_decls, embed_lookup, norm_decl, rms_norm
+from .plan import LayerKind, layer_plan
+from .transformer import DecoderLM, _apply_layer, _layer_decls, _stack
+
+
+class EncDecLM(DecoderLM):
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.n_enc_layers > 0
+        self.cfg = cfg
+        self.enc_plan = [(cfg.n_enc_layers, (LayerKind(block="enc"),))]
+        self.plan = [(cfg.n_layers, (LayerKind(block="xdec"),))]
+
+    def decls(self) -> dict:
+        cfg = self.cfg
+        enc_segs = [[_stack(_layer_decls(cfg, k), c) for k in p]
+                    for c, p in self.enc_plan]
+        dec_segs = [[_stack(_layer_decls(cfg, k), c) for k in p]
+                    for c, p in self.plan]
+        return {
+            "embed": embed_decls(cfg.padded_vocab, cfg.d_model),
+            "enc_norm": norm_decl(cfg.d_model),
+            "final_norm": norm_decl(cfg.d_model),
+            "enc_segs": enc_segs,
+            "segs": dec_segs,
+        }
+
+    # -- encoder ------------------------------------------------------------
+    def encode(self, params, embeds: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        x = logical_shard(embeds.astype(cfg.dtype), "batch", "seq", "embed")
+        for si, (count, pattern) in enumerate(self.enc_plan):
+            seg_params = params["enc_segs"][si]
+
+            def body(x, lp, _pattern=pattern):
+                for j, kind in enumerate(_pattern):
+                    x, _ = _apply_layer(cfg, kind, lp[j], x)
+                return x, None
+
+            if cfg.remat != "none":
+                body = jax.checkpoint(body, prevent_cse=False)
+            x, _ = jax.lax.scan(body, x, seg_params)
+        return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+    # -- decoder over encoder memory -----------------------------------------
+    def _dec_hidden(self, params, tokens, memory):
+        cfg = self.cfg
+        x = embed_lookup(params["embed"], tokens)
+        for si, (count, pattern) in enumerate(self.plan):
+            seg_params = params["segs"][si]
+
+            def body(x, lp, _pattern=pattern):
+                for j, kind in enumerate(_pattern):
+                    x, _ = _apply_layer(cfg, kind, lp[j], x, enc_memory=memory)
+                return x, None
+
+            if cfg.remat != "none":
+                body = jax.checkpoint(body, prevent_cse=False)
+            x, _ = jax.lax.scan(body, x, seg_params)
+        return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    def hidden(self, params, tokens=None, embeds=None, q_offset: int = 0):
+        memory = self.encode(params, embeds)
+        return self._dec_hidden(params, tokens, memory)
+
+    def loss(self, params, batch: dict) -> jax.Array:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        h = self.hidden(params, tokens, batch["embeds"])
+        b, s, _ = h.shape
+        labels = jnp.roll(tokens, -1, axis=1)
+        mask = jnp.broadcast_to((jnp.arange(s) < s - 1)[None, :], (b, s))
+        return chunked_softmax_xent(self._out_table(params), h, labels, mask,
+                                    cfg.vocab_size, cfg.logit_chunk)
+
+    # -- prefill / decode ------------------------------------------------------
+    def prefill(self, params, tokens=None, embeds=None):
+        cfg = self.cfg
+        memory = self.encode(params, embeds)
+        x = embed_lookup(params["embed"], tokens)
+        cache_segs: List[list] = []
+        for si, (count, pattern) in enumerate(self.plan):
+            seg_params = params["segs"][si]
+
+            def body(x, lp, _pattern=pattern):
+                caches = []
+                for j, kind in enumerate(_pattern):
+                    x, nc = _apply_layer(cfg, kind, lp[j], x, enc_memory=memory)
+                    caches.append(nc)
+                return x, caches
+
+            x, seg_cache = jax.lax.scan(body, x, seg_params)
+            cache_segs.append(seg_cache)
+        h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = (h[:, -1] @ self._out_table(params).T).astype(jnp.float32)
+        cache = {"pos": jnp.asarray(tokens.shape[1], jnp.int32), "segs": cache_segs}
+        return cache, logits
+
+    def empty_cache(self, batch: int, t_max: int, enc_len: int = 0) -> dict:
+        cfg = self.cfg
+        k, hd = cfg.n_kv_heads, cfg.hd
+        seg = [{
+            "k": jnp.zeros((cfg.n_layers, batch, t_max, k, hd), cfg.dtype),
+            "v": jnp.zeros((cfg.n_layers, batch, t_max, k, hd), cfg.dtype),
+            "ck": jnp.zeros((cfg.n_layers, batch, enc_len or t_max, k, hd), cfg.dtype),
+            "cv": jnp.zeros((cfg.n_layers, batch, enc_len or t_max, k, hd), cfg.dtype),
+        }]
+        return {"pos": jnp.zeros((), jnp.int32), "segs": [seg]}

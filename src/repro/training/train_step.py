@@ -1,0 +1,107 @@
+"""Trainer: microbatched train_step with FSDP/ZeRO sharding and quantized
+optimizer states. One instance covers every zoo architecture.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.common import (ShardingRules, init_params, is_decl, param_specs)
+from repro.configs.base import ModelConfig, TrainConfig
+from .optim import AdamW, QTensor
+
+
+@dataclasses.dataclass
+class Trainer:
+    model: Any
+    tcfg: TrainConfig
+    gather_specs: Any = None   # PartitionSpec tree for hoisted FSDP gathers
+
+    def __post_init__(self):
+        self.opt = AdamW(self.tcfg)
+
+    # -- state ----------------------------------------------------------------
+    def init_state(self, key: jax.Array) -> Dict[str, Any]:
+        params = self.model.init(key)
+        return {"params": params, "opt": self.opt.init(params)}
+
+    def abstract_state(self) -> Dict[str, Any]:
+        decls = self.model.decls()
+        params = jax.eval_shape(lambda: init_params(decls, jax.random.PRNGKey(0)))
+        opt = jax.eval_shape(self.opt.init, params)
+        return {"params": params, "opt": opt}
+
+    def state_specs(self, rules: ShardingRules) -> Dict[str, Any]:
+        decls = self.model.decls()
+        p_specs = param_specs(decls, rules)
+        if self.tcfg.moment_dtype == "int8":
+            # param-shaped QTensors: q shards exactly like the parameter,
+            # scale takes the leading axes — no moment-reshard collectives
+            m_specs = jax.tree.map(
+                lambda s: QTensor(q=s, scale=P(*s[:-1]) if len(s) else P()),
+                p_specs, is_leaf=lambda x: isinstance(x, P))
+        else:
+            m_specs = p_specs
+        return {
+            "params": p_specs,
+            "opt": {"step": P(), "m": m_specs, "v": m_specs},
+        }
+
+    # -- step -----------------------------------------------------------------
+    def train_step(self, state: Dict[str, Any], batch: Dict[str, Any]):
+        tcfg = self.tcfg
+        params = state["params"]
+        if tcfg.hoist_gather and self.gather_specs is not None:
+            # materialize the gathered (TP-only) weights once per step; the
+            # microbatch loop below then re-uses them G times
+            from repro.common.sharding import active_mesh
+            from jax.sharding import NamedSharding
+            mesh = active_mesh()
+            if mesh is not None:
+                params = jax.tree.map(
+                    lambda p, s: jax.lax.with_sharding_constraint(
+                        p, NamedSharding(mesh, s)),
+                    params, self.gather_specs)
+        g = tcfg.microbatches
+        acc_dt = jnp.bfloat16 if tcfg.accum_dtype == "bf16" else jnp.float32
+
+        def reshape_mb(x):
+            return x.reshape((g, x.shape[0] // g) + x.shape[1:])
+
+        mb_batch = jax.tree.map(reshape_mb, batch)
+
+        def micro(carry, mb):
+            loss_sum, grads = carry
+            loss, gs = jax.value_and_grad(self.model.loss)(params, mb)
+            grads = jax.tree.map(lambda a, x: a + x.astype(acc_dt), grads, gs)
+            return (loss_sum + loss, grads), None
+
+        zero_grads = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+        (loss_sum, grads), _ = jax.lax.scan(
+            micro, (jnp.zeros((), jnp.float32), zero_grads), mb_batch)
+        grads = jax.tree.map(lambda x: x / g, grads)
+
+        new_params, new_opt, gnorm = self.opt.update(grads, state["opt"], params)
+        metrics = {"loss": loss_sum / g, "grad_norm": gnorm}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    # -- jit/AOT helpers -------------------------------------------------------
+    def jitted(self, mesh, rules: ShardingRules, batch_specs):
+        from jax.sharding import NamedSharding
+
+        specs = self.state_specs(rules)
+        to_sharding = lambda tree: jax.tree.map(
+            lambda s: NamedSharding(mesh, s), tree,
+            is_leaf=lambda x: isinstance(x, P))
+        state_sh = to_sharding(specs)
+        batch_sh = to_sharding(batch_specs)
+        return jax.jit(
+            self.train_step,
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,),
+        )

@@ -1,0 +1,19 @@
+import os
+
+# smoke tests and benches must see ONE device; only dryrun sets 512 (and only
+# in its own process)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def qaserve_small():
+    from repro.data.qaserve import generate
+    return generate(n=540, seed=0)
+
+
+@pytest.fixture(scope="session")
+def qaserve_splits(qaserve_small):
+    return qaserve_small.split()

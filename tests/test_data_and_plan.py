@@ -1,0 +1,88 @@
+"""Data substrate + layer-plan/config consistency."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import (LONG_500K_OK, cell_applicable, get_config,
+                           get_smoke_config, list_archs)
+from repro.data import tokenizer
+from repro.data.qaserve import L_MAX, bucket_expectation, bucketize, generate
+from repro.models.plan import layer_plan, plan_layer_count
+
+
+def test_qaserve_deterministic_and_split_disjoint():
+    a = generate(n=300, seed=5)
+    b = generate(n=300, seed=5)
+    assert np.array_equal(a.correct, b.correct)
+    assert np.array_equal(a.out_len, b.out_len)
+    tr, va, te = a.split(seed=1)
+    assert tr.n + va.n + te.n == a.n
+    ids = [q.split()[-1] for q in tr.queries + va.queries + te.queries]
+    assert len(set(ids)) == a.n  # no overlap
+
+
+def test_qaserve_skill_ordering():
+    """Latent skills must show up in marginal correctness (sanity of the sim)."""
+    ds = generate(n=2000, seed=0)
+    marg = ds.correct.mean(axis=0)
+    skills = np.array([p.skill for p in ds.pool])
+    assert np.corrcoef(marg, skills)[0, 1] > 0.9
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_buckets=st.integers(2, 100),
+       lengths=st.lists(st.integers(1, L_MAX), min_size=1, max_size=50))
+def test_bucketize_bounds(n_buckets, lengths):
+    b = bucketize(np.array(lengths), n_buckets)
+    assert b.min() >= 0 and b.max() < n_buckets
+    # expectation of a one-hot bucket distribution is the bucket midpoint
+    probs = np.eye(n_buckets)[b]
+    mids = bucket_expectation(probs, n_buckets)
+    width = L_MAX / n_buckets
+    assert np.all(np.abs(mids - (b + 0.5) * width) < 1e-6)
+
+
+def test_tokenizer_deterministic_padded():
+    a = tokenizer.encode("which enzyme catalyzes the reaction", 16)
+    b = tokenizer.encode("which enzyme catalyzes the reaction", 16)
+    assert np.array_equal(a, b)
+    assert a.shape == (16,) and a[0] == tokenizer.CLS
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_layer_plan_covers_stack(arch):
+    cfg = get_config(arch)
+    plan = layer_plan(cfg)
+    assert plan_layer_count(plan) == cfg.n_layers
+    smoke = get_smoke_config(arch)
+    assert plan_layer_count(layer_plan(smoke)) == smoke.n_layers
+
+
+def test_gemma_local_global_pattern():
+    cfg = get_config("gemma3-4b")
+    flags = [cfg.layer_is_global_attn(i) for i in range(cfg.n_layers)]
+    assert sum(flags) == cfg.n_layers // 6  # 5:1 local:global
+    assert flags[5] and not flags[0]
+
+
+def test_long500k_applicability_table():
+    assert LONG_500K_OK == {"xlstm-350m", "hymba-1.5b", "gemma3-4b",
+                            "h2o-danube-3-4b"}
+    assert not cell_applicable("qwen2-72b", "long_500k")
+    assert cell_applicable("qwen2-72b", "decode_32k")
+    assert cell_applicable("xlstm-350m", "long_500k")
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_sharding_divisibility(arch):
+    """Every full config must shard cleanly on the 16x16 production mesh."""
+    cfg = get_config(arch)
+    tp = 16
+    assert cfg.padded_vocab % tp == 0
+    assert cfg.d_model % tp == 0
+    if cfg.d_ff:
+        assert cfg.d_ff % tp == 0
+    if cfg.attn_policy == "head_tp":
+        assert cfg.n_heads % tp == 0
+    if cfg.n_experts:
+        assert cfg.n_experts % 16 == 0  # EP over data axis

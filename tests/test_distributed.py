@@ -1,0 +1,193 @@
+"""Distribution correctness on 8 host devices (subprocess: XLA device-count
+flags must be set before jax initializes)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(snippet: str, n_dev: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(snippet)],
+                         capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_sharded_train_step_matches_single_device():
+    print(_run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.common import use_mesh, param_specs
+        from repro.configs import get_smoke_config
+        from repro.configs.base import ShapeConfig, TrainConfig
+        from repro.distributed.sharding import rules_for
+        from repro.models import build_model
+        from repro.models.zoo import concrete_inputs
+        from repro.training import Trainer
+        import dataclasses
+
+        cfg = dataclasses.replace(get_smoke_config('internlm2-20b'),
+                                  dtype=jnp.float32)
+        m = build_model(cfg)
+        # fp32 accumulation: first-step Adam is sign-like, so bf16 grad-accum
+        # rounding differences across reduction orders would dominate the
+        # sharding-parity signal this test is after
+        tr = Trainer(m, TrainConfig(microbatches=2, moment_dtype='fp32',
+                                    accum_dtype='fp32'))
+        key = jax.random.PRNGKey(0)
+        state = tr.init_state(key)
+        state = jax.tree.map(lambda x: x.astype(jnp.float32)
+                             if x.dtype == jnp.bfloat16 else x, state)
+        batch = concrete_inputs(cfg, ShapeConfig('t', 32, 4, 'train'), key, 4, 32)
+
+        ref_state, ref_metrics = jax.jit(tr.train_step)(
+            jax.tree.map(lambda x: x, state), batch)
+
+        mesh = jax.make_mesh((2, 4), ('data', 'model'))
+        rules = rules_for(cfg, mesh, 'train')
+        with use_mesh(mesh, rules):
+            specs = tr.state_specs(rules)
+            sh = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                              is_leaf=lambda x: isinstance(x, P))
+            st = jax.tree.map(lambda x, s: jax.device_put(x, s), state, sh)
+            bsh = {k: NamedSharding(mesh, P(('data',),)) for k in batch}
+            bt = {k: jax.device_put(v, NamedSharding(
+                mesh, P(*((('data',),) + (None,)*(v.ndim-1))))) for k, v in batch.items()}
+            new_state, metrics = jax.jit(tr.train_step,
+                                         in_shardings=(sh, None),
+                                         out_shardings=(sh, None))(st, bt)
+        d = abs(float(metrics['loss']) - float(ref_metrics['loss']))
+        print('loss diff', d)
+        assert d < 1e-4, d
+        # parameters agree after one update
+        errs = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+            a.astype(jnp.float32) - b.astype(jnp.float32)))),
+            new_state['params'], ref_state['params'])
+        mx = max(jax.tree.leaves(errs))
+        print('max param diff', mx)
+        # step-1 Adam is sign(g): cross-device reduction order flips the sign
+        # of near-zero gradient coordinates, moving those params by up to
+        # 2*lr. Anything beyond that bound would be a real sharding bug.
+        assert mx < 2.5 * 3e-4, mx
+        print('OK')
+    """))
+
+
+def test_moe_ep_shard_map_matches_dense():
+    print(_run("""
+        import dataclasses
+        import jax, jax.numpy as jnp
+        from repro.common import use_mesh
+        from repro.configs import get_smoke_config
+        from repro.distributed.sharding import rules_for
+        from repro.models.moe import moe_dense, moe_ep, moe_decls
+        from repro.common import init_params
+
+        cfg = dataclasses.replace(get_smoke_config('dbrx-132b'),
+                                  capacity_factor=8.0, dtype=jnp.float32)
+        key = jax.random.PRNGKey(0)
+        params = jax.tree.map(lambda x: x.astype(jnp.float32)
+                              if x.dtype == jnp.bfloat16 else x,
+                              init_params(moe_decls(cfg), key))
+        x = jax.random.normal(key, (4, 16, cfg.d_model), jnp.float32)
+        ref = moe_dense(cfg, params, x)
+        mesh = jax.make_mesh((4, 2), ('data', 'model'))
+        rules = rules_for(cfg, mesh, 'train')
+        with use_mesh(mesh, rules):
+            out = jax.jit(lambda p, xx: moe_ep(cfg, p, xx))(params, x)
+        err = float(jnp.max(jnp.abs(out - ref)))
+        print('moe ep err', err)
+        assert err < 1e-4, err
+        print('OK')
+    """))
+
+
+def test_pipeline_parallel_matches_sequential():
+    print(_run("""
+        import jax, jax.numpy as jnp
+        from repro.distributed.pipeline import pipeline_forward
+
+        mesh = jax.make_mesh((4,), ('stage',))
+        S, M, mb, d = 4, 8, 2, 16
+        key = jax.random.PRNGKey(0)
+        ws = jax.random.normal(key, (S, d, d)) / jnp.sqrt(d)
+
+        def stage_fn(w, x):
+            return jnp.tanh(x @ w)
+
+        x = jax.random.normal(jax.random.fold_in(key, 1), (M, mb, d))
+        piped = pipeline_forward(mesh, stage_fn, M)(ws, x)
+        ref = x
+        for s in range(S):
+            ref = jnp.tanh(ref @ ws[s])
+        err = float(jnp.max(jnp.abs(piped - ref)))
+        print('pipeline err', err)
+        assert err < 1e-5, err
+        print('OK')
+    """))
+
+
+def test_sp_decode_cross_shard_merge_matches_kernel():
+    """Sequence-sharded decode: shard-local kernel partials + psum-style merge
+    equals the unsharded oracle (the long_500k path)."""
+    print(_run("""
+        import jax, jax.numpy as jnp
+        from repro.kernels.decode_attention.kernel import decode_attention_kernel
+        from repro.kernels.decode_attention.ops import merge_partials
+        from repro.kernels.decode_attention.ref import decode_attention_ref
+
+        key = jax.random.PRNGKey(0)
+        B, T, H, K, D = 1, 2048, 4, 2, 64
+        q = jax.random.normal(key, (B, 1, H, D), jnp.float32)
+        kc = jax.random.normal(jax.random.fold_in(key, 1), (B, T, K, D), jnp.float32)
+        vc = jax.random.normal(jax.random.fold_in(key, 2), (B, T, K, D), jnp.float32)
+        pos = 1800
+        # 8-way manual shard over T, per-shard partials, global merge
+        os_, ms_, ls_ = [], [], []
+        for s in range(8):
+            sl = slice(s * T // 8, (s + 1) * T // 8)
+            # positions inside the shard are global: pass pos offset via mask
+            o, m, l = decode_attention_kernel(
+                q, kc[:, sl], vc[:, sl],
+                jnp.maximum(pos - s * T // 8, 0), bs=128)
+            os_.append(o); ms_.append(m); ls_.append(l)
+        o = jnp.concatenate(os_, axis=2)
+        m = jnp.concatenate(ms_, axis=2)
+        l = jnp.concatenate(ls_, axis=2)
+        out = merge_partials(o, m, l).reshape(B, 1, H, D)
+        ref = decode_attention_ref(q, kc, vc, pos)
+        err = float(jnp.max(jnp.abs(out - ref)))
+        print('sp decode err', err)
+        assert err < 2e-5, err
+        print('OK')
+    """))
+
+
+def test_elastic_checkpoint_remesh():
+    """Save under a (2,4) mesh, restore under (4,2) — layout-agnostic."""
+    print(_run("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.ft.checkpoint import Checkpointer
+        import tempfile
+
+        mesh1 = jax.make_mesh((2, 4), ('data', 'model'))
+        mesh2 = jax.make_mesh((4, 2), ('data', 'model'))
+        w = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+        tree = {'w': jax.device_put(w, NamedSharding(mesh1, P('data', 'model')))}
+        ck = Checkpointer(tempfile.mkdtemp())
+        ck.save(1, tree, blocking=True)
+        sh2 = {'w': NamedSharding(mesh2, P('data', 'model'))}
+        restored, _ = ck.restore(jax.eval_shape(lambda: tree), shardings=sh2)
+        assert restored['w'].sharding == sh2['w']
+        assert bool(jnp.all(restored['w'] == w))
+        print('OK')
+    """))

@@ -1,0 +1,93 @@
+"""Pallas kernel correctness: shape/dtype sweeps vs pure-jnp oracles
+(interpret=True executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("b,s,h,kh,d,causal,window,dtype", [
+    (2, 256, 4, 2, 64, True, 0, jnp.float32),
+    (1, 512, 8, 8, 128, True, 128, jnp.float32),
+    (2, 256, 4, 1, 64, False, 0, jnp.float32),
+    (1, 256, 4, 4, 64, True, 0, jnp.bfloat16),
+    (1, 128, 2, 1, 32, True, 32, jnp.float32),
+])
+def test_flash_attention_vs_ref(b, s, h, kh, d, causal, window, dtype):
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    q = jax.random.normal(KEY, (b, s, h, d), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, kh, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, kh, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, bq=64, bk=128)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    assert float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                 - ref.astype(jnp.float32)))) < tol
+
+
+@pytest.mark.parametrize("b,t,h,kh,d,window,pos", [
+    (2, 1024, 8, 2, 64, 0, 700),
+    (1, 2048, 4, 4, 128, 256, 1500),
+    (3, 512, 6, 3, 32, 0, 1),
+])
+def test_decode_attention_vs_ref(b, t, h, kh, d, window, pos):
+    from repro.kernels.decode_attention.ops import decode_attention
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+    q = jax.random.normal(KEY, (b, 1, h, d), jnp.float32)
+    kc = jax.random.normal(jax.random.fold_in(KEY, 1), (b, t, kh, d), jnp.float32)
+    vc = jax.random.normal(jax.random.fold_in(KEY, 2), (b, t, kh, d), jnp.float32)
+    out = decode_attention(q, kc, vc, pos, window=window, bs=256)
+    ref = decode_attention_ref(q, kc, vc, pos, window=window)
+    assert float(jnp.max(jnp.abs(out - ref))) < 2e-5
+
+
+@pytest.mark.parametrize("ndb,d,b,k,tile", [
+    (1024, 64, 17, 8, 256),
+    (2048, 128, 5, 16, 512),
+    (512, 32, 128, 4, 128),
+])
+def test_topk_retrieval_vs_ref(ndb, d, b, k, tile):
+    from repro.kernels.topk_retrieval.ops import topk_retrieval
+    from repro.kernels.topk_retrieval.ref import topk_retrieval_ref
+    st_ = jax.random.normal(KEY, (ndb, d))
+    st_ = st_ / jnp.linalg.norm(st_, axis=1, keepdims=True)
+    q = jax.random.normal(jax.random.fold_in(KEY, 1), (b, d))
+    q = q / jnp.linalg.norm(q, axis=1, keepdims=True)
+    v1, i1 = topk_retrieval(st_, q, k, bq=64, tile=tile)
+    v2, i2 = topk_retrieval_ref(st_, q, k)
+    assert float(jnp.max(jnp.abs(v1 - v2))) < 1e-5
+    # indices may permute within exact ties; compare as sets of values
+    assert float((jnp.sort(i1, 1) == jnp.sort(i2, 1)).mean()) > 0.999
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(4, 80), m=st.integers(2, 8), seed=st.integers(0, 100))
+def test_assign_kernel_matches_ref_property(n, m, seed):
+    from repro.kernels.lagrangian_assign.kernel import assign_step_kernel
+    from repro.kernels.lagrangian_assign.ref import assign_step_ref
+    key = jax.random.PRNGKey(seed)
+    c = jax.random.uniform(key, (n, m))
+    a = jax.random.uniform(jax.random.fold_in(key, 1), (n, m))
+    lam1 = float(jax.random.uniform(jax.random.fold_in(key, 2), ()) * 3)
+    lam2 = jax.random.uniform(jax.random.fold_in(key, 3), (m,))
+    x1, cnt1, q1, c1 = assign_step_kernel(c, a, lam1, lam2, bq=32)
+    x2, cnt2, q2, c2 = assign_step_ref(c, a, lam1, lam2, n)
+    assert bool(jnp.all(x1 == x2))
+    assert float(jnp.max(jnp.abs(cnt1 - cnt2))) < 1e-5
+    assert abs(float(q1 - q2)) < 1e-3 and abs(float(c1 - c2)) < 1e-3
+
+
+def test_kernel_solver_matches_jnp_solver():
+    from repro.kernels.lagrangian_assign.ops import solve_assignment_kernel
+    from repro.core.optimizer import solve_assignment
+    c = jax.random.uniform(KEY, (200, 6))
+    a = jax.random.uniform(jax.random.fold_in(KEY, 1), (200, 6))
+    loads = jnp.full((6,), 60.0)
+    x1, i1 = solve_assignment_kernel(c, a, 0.6, loads, iters=80)
+    x2, i2 = solve_assignment(c, a, 0.6, loads, iters=80)
+    assert bool(jnp.all(x1 == x2))
+    assert abs(float(i1["cost"]) - float(i2["cost"])) < 1e-3

@@ -1,0 +1,127 @@
+"""Training substrate + fault tolerance: quantized moments, checkpoint
+roundtrip, elastic restore, compression error feedback, scheduler invariants."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+KEY = jax.random.PRNGKey(0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), scale=st.floats(1e-4, 1e3))
+def test_int8_moment_roundtrip_error_bound(seed, scale):
+    from repro.training.optim import dequantize, quantize
+    x = np.random.RandomState(seed).randn(300).astype(np.float32) * scale
+    xq = dequantize(quantize(jnp.asarray(x)))
+    # blockwise int8: error <= blockmax/127 per element
+    blockmax = np.abs(x).max()
+    assert float(jnp.max(jnp.abs(xq - x))) <= blockmax / 127 + 1e-7
+
+
+def test_grad_clip_bounds_update():
+    from repro.configs.base import TrainConfig
+    from repro.training.optim import AdamW
+    opt = AdamW(TrainConfig(grad_clip=1.0, learning_rate=1.0,
+                            weight_decay=0.0, moment_dtype="fp32"))
+    p = {"w": jnp.ones((4,))}
+    s = opt.init(p)
+    g = {"w": jnp.full((4,), 1e6)}
+    newp, s, gnorm = opt.update(g, s, p)
+    assert float(gnorm) > 1e5
+    assert float(jnp.max(jnp.abs(newp["w"] - p["w"]))) < 11.0  # clipped step
+
+
+def test_checkpoint_roundtrip_and_elastic(tmp_path):
+    from repro.ft.checkpoint import Checkpointer
+    tree = {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.bfloat16)},
+            "step": jnp.asarray(7, jnp.int32)}
+    ck = Checkpointer(str(tmp_path))
+    ck.save(7, tree, blocking=True)
+    restored, step = ck.restore(jax.eval_shape(lambda: tree))
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        assert bool(jnp.all(a == b))
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path):
+    from repro.ft.checkpoint import Checkpointer
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tree = {"w": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4):
+        ck.save(s, tree, blocking=True)
+    assert ck.list_steps() == [3, 4]
+
+
+def test_compressed_psum_error_feedback_converges():
+    """With error feedback, repeated compressed reductions of a constant
+    gradient average to the true value."""
+    from repro.distributed.compression import compressed_psum
+
+    def run(method):
+        g = jnp.asarray(np.random.RandomState(0).randn(512).astype(np.float32))
+
+        def body(err, _):
+            red, err = compressed_psum(g, "i", err, method=method)
+            return err, red
+
+        err0 = jnp.zeros_like(g)
+        _, reds = jax.vmap(
+            lambda gg: jax.lax.scan(
+                lambda e, x: body(e, x), jnp.zeros_like(gg), jnp.arange(8)),
+            axis_name="i")(g[None])
+        return reds[0]
+
+    reds = run("int8")
+    g = np.random.RandomState(0).randn(512).astype(np.float32)
+    # cumulative mean of EF-compressed reductions approaches the true gradient
+    cum = np.cumsum(np.asarray(reds), axis=0) / np.arange(1, 9)[:, None]
+    err_first = np.abs(np.asarray(reds)[0] - g).max()
+    err_last = np.abs(cum[-1] - g).max()
+    assert err_last <= err_first + 1e-6
+    assert err_last < 0.02 * np.abs(g).max()
+
+
+def test_health_monitor_detects_failure_and_straggler():
+    from repro.ft.health import HealthConfig, HealthMonitor
+    mon = HealthMonitor(2, HealthConfig(heartbeat_timeout_s=5.0))
+    mon.beat(0, t=100.0)
+    mon.beat(1, t=90.0)
+    assert mon.dead_units(now=100.0) == [1]
+    for _ in range(16):
+        mon.record_step(1.0)
+    assert mon.is_straggler(10.0) and not mon.is_straggler(1.5)
+
+
+def test_scheduler_never_violates_concurrency(qaserve_splits):
+    from repro.core import BalanceAware, SchedulerConfig, run_serving
+    _, _, test = qaserve_splits
+    res = run_serving(test, BalanceAware(), SchedulerConfig(loads=3))
+    assert res.per_model_counts.sum() == test.n
+    assert res.success_rate >= 0.0 and res.cost > 0
+
+
+def test_streaming_equals_batch_size_one(qaserve_splits):
+    from repro.core import BalanceAware, SchedulerConfig, run_serving
+    _, _, test = qaserve_splits
+    r1 = run_serving(test, BalanceAware(), SchedulerConfig(mode="streaming", seed=3))
+    r2 = run_serving(test, BalanceAware(), SchedulerConfig(mode="batching",
+                                                           batch_size=1, seed=3))
+    assert r1.per_model_counts.tolist() == r2.per_model_counts.tolist()
+    assert abs(r1.cost - r2.cost) < 1e-9
+
+
+def test_hedging_reduces_makespan_on_heavy_tail(qaserve_splits):
+    from repro.core import RandomPolicy, SchedulerConfig, run_serving
+    _, _, test = qaserve_splits
+    base = run_serving(test, RandomPolicy(), SchedulerConfig(loads=2, seed=1))
+    hedged = run_serving(test, RandomPolicy(),
+                         SchedulerConfig(loads=2, seed=1, hedge=True,
+                                         hedge_factor=2.0))
+    assert hedged.hedged >= 0
+    assert hedged.makespan <= base.makespan * 1.25  # never catastrophically worse
