@@ -23,6 +23,7 @@ MODULES = [
     ("table5", "benchmarks.bench_similar_scale"),
     ("table6", "benchmarks.bench_same_series"),
     ("kernels", "benchmarks.bench_kernels"),
+    ("routing", "benchmarks.bench_routing"),   # writes BENCH_routing.json
     ("roofline", "benchmarks.bench_roofline"),
 ]
 

@@ -17,18 +17,20 @@ print(f"{train.n} train / {test.n} test queries over {ds.m} pool models")
 predictor = RetrievalPredictor(k=8).fit(train)
 print("predictor:", predictor.eval_accuracy(test))
 
-# 3. stage 2 — constrained routing: min cost s.t. mean quality >= alpha
+# 3. stage 2 — constrained routing: min cost s.t. mean quality >= alpha.
+# Policies consume an array-based RouteBatch; QAServe is one producer of it.
 router = OmniRouter(predictor, RouterConfig(alpha=0.75))
 loads = np.full(ds.m, float(test.n))        # no concurrency pressure here
-x = router.route(test, loads)
+batch = test.route_batch(loads)
+x = router.route(batch)
 print("ECCOS :", evaluate_assignment(test, x))
 
 # 4. compare with a workload-only baseline
-ba = BalanceAware().route(test, loads, rng=np.random.RandomState(0))
+ba = BalanceAware().route(batch, rng=np.random.RandomState(0))
 print("BA    :", evaluate_assignment(test, ba))
 
 # 5. budget-controllable mode (OmniRouter): max quality s.t. cost <= B
 budget_router = OmniRouter(predictor, RouterConfig(budget=0.02))
-xb = budget_router.route(test, loads)
+xb = budget_router.route(batch)
 m = evaluate_assignment(test, xb)
 print(f"budget: SR={m['success_rate']:.3f} cost=${m['cost']:.4f} (B=$0.02)")

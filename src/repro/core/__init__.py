@@ -1,10 +1,12 @@
 # ECCOS/OmniRouter core: multi-objective predictors (trained + retrieval),
-# Lagrangian-dual constrained optimizer, serving scheduler, baselines.
+# unified Lagrangian-dual solver, serving scheduler, baselines.
 from .baselines import (BalanceAware, Oracle, PerceptionOnly, Policy,  # noqa: F401
-                        RandomPolicy, S3Cost)
-from .optimizer import (brute_force, repair_workload, solve_assignment,  # noqa: F401
+                        RandomPolicy, RouteBatch, S3Cost)
+from .optimizer import (DualSolver, SolveInfo, brute_force,  # noqa: F401
+                        primal_polish, repair_workload, solve_assignment,
                         solve_budget)
 from .predictor import PredictorConfig, TrainedPredictor  # noqa: F401
 from .retrieval import RetrievalPredictor  # noqa: F401
 from .router import OmniRouter, RouterConfig, evaluate_assignment  # noqa: F401
-from .scheduler import SchedulerConfig, ServeResult, run_serving  # noqa: F401
+from .scheduler import (SchedulerConfig, ServeResult, route_via_batch,  # noqa: F401
+                        run_serving)

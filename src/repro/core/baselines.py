@@ -1,5 +1,13 @@
-"""Baseline routing policies from the paper's evaluation (§4.2).
+"""Routing policies over the array-based ``RouteBatch`` contract.
 
+A :class:`RouteBatch` is the single routing interface shared by the
+event-driven simulator (``core.scheduler``) and the real serving engine
+(``repro.serving.engine``): per-query feature arrays plus fleet state
+(loads / in-flight counts).  ``QAServe`` is one *producer* of RouteBatches
+(``QAServe.route_batch``), not the interface itself — a live engine can build
+one straight from its request queue.
+
+Baselines from the paper's evaluation (§4.2):
 BA — balance-aware: least-loaded model, random tie-break.
 S3 — encoder length-bucket predictor, adapted cost-oriented (cheapest
      predicted-cost model with available capacity).
@@ -11,21 +19,54 @@ cheapest correct model (else the most capable), respecting workloads.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import List, Optional
 
 import numpy as np
 
-from repro.data.qaserve import QAServe
+
+@dataclasses.dataclass
+class RouteBatch:
+    """One batch of queries to route, as arrays.
+
+    ``queries`` is the raw text (featurization source for the predictors);
+    everything else is numeric.  ``cost_true``/``correct_true`` carry ground
+    truth when the producer has it (simulation; oracle policy) and are None
+    in a live engine.
+    """
+
+    queries: List[str]
+    input_len: np.ndarray               # (N,) input token lengths
+    price_in: np.ndarray                # (M,) $ per 1k input tokens
+    price_out: np.ndarray               # (M,) $ per 1k output tokens
+    loads: np.ndarray                   # (M,) per-model concurrency limits
+    counts: np.ndarray                  # (M,) in-flight per model
+    cost_true: Optional[np.ndarray] = None     # (N, M) true $ (oracle/sim)
+    correct_true: Optional[np.ndarray] = None  # (N, M) true correctness
+
+    @property
+    def n(self) -> int:
+        return len(self.queries)
+
+    @property
+    def m(self) -> int:
+        return len(self.price_in)
+
+    @property
+    def available(self) -> np.ndarray:
+        """Remaining per-model capacity (never negative)."""
+        return np.maximum(np.asarray(self.loads, float)
+                          - np.asarray(self.counts, float), 0.0)
 
 
 class Policy:
     name = "base"
+    needs_truth = False   # True -> producers must fill cost_true/correct_true
 
-    def prepare(self, train_ds: QAServe):
+    def prepare(self, train_ds):
         return self
 
-    def route(self, ds: QAServe, loads: np.ndarray,
-              counts: Optional[np.ndarray] = None, rng=None) -> np.ndarray:
+    def route(self, batch: RouteBatch, rng=None) -> np.ndarray:
+        """Assign each query in the batch to a pool model: (N,) int."""
         raise NotImplementedError
 
 
@@ -51,10 +92,11 @@ def _capacity_greedy(pref_costs: np.ndarray, loads, counts, rng) -> np.ndarray:
 class BalanceAware(Policy):
     name = "BA"
 
-    def route(self, ds, loads, counts=None, rng=None):
+    def route(self, batch: RouteBatch, rng=None):
         rng = rng or np.random.RandomState(0)
-        n, m = ds.n, ds.m
-        counts = np.zeros(m, int) if counts is None else counts.astype(int).copy()
+        n, m = batch.n, batch.m
+        counts = np.asarray(batch.counts).astype(int).copy()
+        loads = np.asarray(batch.loads)
         out = np.zeros(n, int)
         for i in range(n):
             free = loads - counts
@@ -81,9 +123,9 @@ class S3Cost(Policy):
         self.pred.fit(train_ds, steps=self.steps, batch=48)
         return self
 
-    def route(self, ds, loads, counts=None, rng=None):
-        _, _, cost = self.pred.predict_arrays(ds)
-        return _capacity_greedy(cost, loads, counts, rng)
+    def route(self, batch, rng=None):
+        _, _, cost = self.pred.predict_arrays(batch)
+        return _capacity_greedy(cost, batch.loads, batch.counts, rng)
 
 
 class PerceptionOnly(Policy):
@@ -99,26 +141,29 @@ class PerceptionOnly(Policy):
         self.ret = RetrievalPredictor(k=1).fit(train_ds)
         return self
 
-    def route(self, ds, loads, counts=None, rng=None):
-        _, _, cost = self.ret.predict_arrays(ds)
-        return _capacity_greedy(cost, loads, counts, rng)
+    def route(self, batch, rng=None):
+        _, _, cost = self.ret.predict_arrays(batch)
+        return _capacity_greedy(cost, batch.loads, batch.counts, rng)
 
 
 class RandomPolicy(Policy):
     name = "random"
 
-    def route(self, ds, loads, counts=None, rng=None):
+    def route(self, batch, rng=None):
         rng = rng or np.random.RandomState(0)
-        return _capacity_greedy(rng.rand(ds.n, ds.m), loads, counts, rng)
+        return _capacity_greedy(rng.rand(batch.n, batch.m),
+                                batch.loads, batch.counts, rng)
 
 
 class Oracle(Policy):
-    """Upper bound: true correctness known."""
+    """Upper bound: true correctness known (simulation only)."""
 
     name = "oracle"
+    needs_truth = True
 
-    def route(self, ds, loads, counts=None, rng=None):
-        cost = ds.cost_matrix()
+    def route(self, batch, rng=None):
+        if batch.cost_true is None or batch.correct_true is None:
+            raise ValueError("Oracle needs a RouteBatch with ground truth")
         # cheapest correct model; incorrect ones get +inf-ish penalty
-        pref = cost + (1 - ds.correct) * 1e3
-        return _capacity_greedy(pref, loads, counts, rng)
+        pref = batch.cost_true + (1 - batch.correct_true) * 1e3
+        return _capacity_greedy(pref, batch.loads, batch.counts, rng)

@@ -1,221 +1,422 @@
 """ECCOS/OmniRouter constrained optimizer (paper §3.2, Appendix A).
 
-Primal:   min_x  Σ c_ij x_ij
-          s.t.   (1/N) Σ a_ij x_ij >= alpha        (quality)
-                 Σ_i x_ij <= L_j                    (per-model workload)
-                 Σ_j x_ij = 1,  x in {0,1}
+Primal (quality mode):
+    min_x  Σ c_ij x_ij
+    s.t.   (1/N) Σ a_ij x_ij >= alpha        (quality)
+           Σ_i x_ij <= L_j                    (per-model workload)
+           Σ_j x_ij = 1,  x in {0,1}
 
-Dual subgradient ascent (Eq. 9-12): assignments are per-query argmins of the
-reduced cost  c_ij − λ1·a_ij/N + λ2,j ; λ1 tracks quality violation, λ2,j
-tracks per-model overload. We additionally keep the **best feasible iterate**
-(min cost among quality- and load-feasible x) — dual iterates oscillate around
-the constraint boundary, and the paper's serving loop wants a concrete
-feasible pick.
+Budget mode (OmniRouter title):  max quality s.t. Σ cost <= B — the *same*
+machinery with the roles of cost/quality swapped.  Both modes are one code
+path: with the unified parameterization
 
-A budget-controllable dual mode (OmniRouter title) is included:
-max quality s.t. Σ cost <= B, same machinery with the roles of cost/quality
-swapped (multiplier mu on the budget).
+    scores_ij = A_ij + lam * B_ij + lam2_j,   feasible  ⇔  Σ B[i, x_i] <= t
+
+quality mode sets (A, B, t) = (cost, -quality/N, -alpha) and budget mode sets
+(A, B, t) = (-quality, cost, B).  Dual subgradient ascent (Eq. 9-12) tracks
+the scalar constraint multiplier `lam` and per-model workload multipliers
+`lam2`; we keep the **best feasible iterate** (min Σ A among feasible x) —
+dual iterates oscillate around the constraint boundary and the serving loop
+wants a concrete feasible pick.
+
+The post-solve feasibility pass (`repair_workload` + `primal_polish`) is
+vectorized JAX — jit-compiled ``lax.while_loop``s with no Python-level
+per-query loops, so the whole route() pipeline stays on device.  NumPy
+reference implementations live in ``repro.kernels.lagrangian_assign.ref`` as
+test oracles.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Dict, Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 
-@dataclasses.dataclass(frozen=True)
-class SolverConfig:
-    iters: int = 150
-    lr_quality: float = 4.0     # alpha_1 in Eq. 9 (scaled by N internally)
-    lr_workload: float = 0.5    # alpha_2 in Eq. 10
-    use_kernel: bool = False    # Pallas fused assign step
+class SolveInfo(NamedTuple):
+    """Uniform solver diagnostics — identical schema in both modes."""
+
+    lam: jax.Array        # scalar constraint multiplier (λ1 / µ)
+    lam_load: jax.Array   # (M,) per-model workload multipliers λ2
+    feasible: jax.Array   # bool — some iterate satisfied all constraints
+    cost: jax.Array       # Σ predicted $ of the returned assignment
+    quality: jax.Array    # mean predicted quality of the returned assignment
+    counts: jax.Array     # (M,) per-model counts of the returned assignment
+    objective: jax.Array  # mode objective of returned x (cost | -Σ quality)
 
 
-def _assign(cost, quality, lam1, lam2, n):
-    scores = cost - lam1 * quality / n + lam2[None, :]
-    return jnp.argmin(scores, axis=1)
+def _mode_params(cost, quality, threshold, lr_con, *, budget_mode: bool):
+    """Map (cost, quality, threshold) onto the unified (A, B, t, lr)."""
+    n = cost.shape[0]
+    if budget_mode:
+        return -quality, cost, threshold, lr_con
+    return cost, -quality / n, -threshold, lr_con * n
 
 
-@partial(jax.jit, static_argnames=("iters",))
-def solve_assignment(cost: jax.Array, quality: jax.Array, alpha: float,
-                     loads: jax.Array, *, iters: int = 150,
-                     lr_quality: float = 4.0, lr_workload: float = 0.5):
-    """Returns (assignment (N,), info dict). All fp32, jit-compiled."""
+def _chosen_sum(mat, x):
+    return jnp.take_along_axis(mat, x[:, None], axis=1).sum()
+
+
+@partial(jax.jit, static_argnames=("mode", "iters"))
+def _solve_ref(cost, quality, threshold, loads, *, mode: str, iters: int,
+               lr_con: float, lr_load: float):
+    """jnp reference dual ascent — the oracle for the fused Pallas path."""
     n, m = cost.shape
     cost = cost.astype(jnp.float32)
     quality = quality.astype(jnp.float32)
     loads = loads.astype(jnp.float32)
+    a_mat, b_mat, t_eff, lr_eff = _mode_params(
+        cost, quality, threshold, lr_con, budget_mode=(mode == "budget"))
 
-    def qual_of(x):
-        return jnp.take_along_axis(quality, x[:, None], axis=1).mean()
-
-    def cost_of(x):
-        return jnp.take_along_axis(cost, x[:, None], axis=1).sum()
-
-    def counts_of(x):
-        return jnp.zeros((m,), jnp.float32).at[x].add(1.0)
+    def assign(lam, lam2):
+        scores = a_mat + lam * b_mat + lam2[None, :]
+        return jnp.argmin(scores, axis=1).astype(jnp.int32)
 
     def body(t, carry):
-        lam1, lam2, best_cost, best_x, found = carry
-        x = _assign(cost, quality, lam1, lam2, n)
-        q = qual_of(x)
-        cnt = counts_of(x)
-        c = cost_of(x)
-        feasible = (q >= alpha) & jnp.all(cnt <= loads)
-        better = feasible & (c < best_cost)
-        best_cost = jnp.where(better, c, best_cost)
+        lam, lam2, best_a, best_x, found = carry
+        x = assign(lam, lam2)
+        asum = _chosen_sum(a_mat, x)
+        bsum = _chosen_sum(b_mat, x)
+        cnt = jnp.zeros((m,), jnp.float32).at[x].add(1.0)
+        feasible = (bsum <= t_eff) & jnp.all(cnt <= loads)
+        better = feasible & (asum < best_a)
+        best_a = jnp.where(better, asum, best_a)
         best_x = jnp.where(better, x, best_x)
         found = found | feasible
         # diminishing steps for subgradient convergence
         step = 1.0 / jnp.sqrt(1.0 + t.astype(jnp.float32))
-        lam1 = jnp.maximum(lam1 + lr_quality * n * step * (alpha - q), 0.0)
-        lam2 = jnp.maximum(lam2 + lr_workload * step * (cnt - loads), 0.0)
-        return lam1, lam2, best_cost, best_x, found
+        lam = jnp.maximum(lam + lr_eff * step * (bsum - t_eff), 0.0)
+        lam2 = jnp.maximum(lam2 + lr_load * step * (cnt - loads), 0.0)
+        return lam, lam2, best_a, best_x, found
 
     init = (jnp.zeros(()), jnp.zeros((m,)), jnp.asarray(jnp.inf),
             jnp.zeros((n,), jnp.int32), jnp.asarray(False))
-    lam1, lam2, best_cost, best_x, found = jax.lax.fori_loop(
-        0, iters, body, init)
-    x_last = _assign(cost, quality, lam1, lam2, n)
+    lam, lam2, best_a, best_x, found = jax.lax.fori_loop(0, iters, body, init)
+    x_last = assign(lam, lam2)
     x = jnp.where(found, best_x, x_last)
-    info = {
-        "lambda1": lam1, "lambda2": lam2, "feasible": found,
-        "cost": jnp.where(found, best_cost, cost_of(x_last)),
-        "quality": qual_of(x), "counts": counts_of(x),
-    }
+    info = SolveInfo(
+        lam=lam, lam_load=lam2, feasible=found,
+        cost=_chosen_sum(cost, x), quality=jnp.take_along_axis(
+            quality, x[:, None], axis=1).sum() / n,
+        counts=jnp.zeros((m,), jnp.float32).at[x].add(1.0),
+        objective=jnp.where(found, best_a, _chosen_sum(a_mat, x_last)),
+    )
     return x, info
 
 
-@partial(jax.jit, static_argnames=("iters",))
-def solve_budget(cost: jax.Array, quality: jax.Array, budget: float,
-                 loads: jax.Array, *, iters: int = 150,
-                 lr_budget: float = 50.0, lr_workload: float = 0.5):
+@dataclasses.dataclass(frozen=True)
+class DualSolver:
+    """One device-resident dual solver for both routing modes.
+
+    mode="quality": min cost s.t. mean quality >= threshold.
+    mode="budget":  max quality s.t. total cost <= threshold.
+    """
+
+    mode: str = "quality"          # "quality" | "budget"
+    iters: int = 150
+    lr_constraint: float = 4.0     # α1 (quality) / µ step (budget, use ~50)
+    lr_workload: float = 0.5       # α2 in Eq. 10
+    use_kernel: bool = False       # fused Pallas dual ascent (1 launch/solve)
+    block_q: int = 256             # query block for the fused kernel
+
+    def __post_init__(self):
+        if self.mode not in ("quality", "budget"):
+            raise ValueError(f"unknown solver mode: {self.mode!r}")
+
+    def solve(self, cost, quality, threshold, loads
+              ) -> Tuple[jax.Array, SolveInfo]:
+        """cost/quality (N, M) -> (assignment (N,), SolveInfo)."""
+        if self.use_kernel:
+            from repro.kernels.lagrangian_assign.ops import solve_fused
+            return solve_fused(cost, quality, threshold, loads,
+                               mode=self.mode, iters=self.iters,
+                               lr_con=self.lr_constraint,
+                               lr_load=self.lr_workload, bq=self.block_q)
+        return _solve_ref(jnp.asarray(cost), jnp.asarray(quality),
+                          jnp.asarray(threshold, jnp.float32),
+                          jnp.asarray(loads), mode=self.mode,
+                          iters=self.iters, lr_con=self.lr_constraint,
+                          lr_load=self.lr_workload)
+
+    def solve_batch(self, cost, quality, thresholds, loads):
+        """vmap over a leading batch axis: cost/quality (B, N, M),
+        thresholds (B,), loads (M,) or (B, M).
+
+        Always runs the jit reference scan (``use_kernel`` is ignored here:
+        the fused kernel is one launch per solve and is not vmapped)."""
+        loads = jnp.asarray(loads)
+        in_axes = (0, 0, 0, 0 if loads.ndim == 2 else None)
+        fn = partial(_solve_ref, mode=self.mode, iters=self.iters,
+                     lr_con=self.lr_constraint, lr_load=self.lr_workload)
+        return jax.vmap(fn, in_axes=in_axes)(
+            jnp.asarray(cost), jnp.asarray(quality),
+            jnp.asarray(thresholds, jnp.float32), loads)
+
+    def solve_grid(self, cost, quality, thresholds, loads):
+        """One compiled call sweeping a (K,) grid of alpha/budget thresholds
+        over a single instance — bench_alpha / sweep workloads.
+
+        Always runs the jit reference scan (``use_kernel`` is ignored here:
+        the fused kernel is one launch per solve and is not vmapped)."""
+        fn = partial(_solve_ref, mode=self.mode, iters=self.iters,
+                     lr_con=self.lr_constraint, lr_load=self.lr_workload)
+        return jax.vmap(fn, in_axes=(None, None, 0, None))(
+            jnp.asarray(cost), jnp.asarray(quality),
+            jnp.asarray(thresholds, jnp.float32), jnp.asarray(loads))
+
+    def route_arrays(self, cost, quality, threshold, loads,
+                     polish_threshold=None) -> Tuple[jax.Array, SolveInfo]:
+        """Full device pipeline: solve -> workload repair -> primal polish."""
+        x, info = self.solve(cost, quality, threshold, loads)
+        cost = jnp.asarray(cost, jnp.float32)
+        quality = jnp.asarray(quality, jnp.float32)
+        loads = jnp.asarray(loads, jnp.float32)
+        lam1 = info.lam if self.mode == "quality" else jnp.zeros(())
+        x = repair_workload(x, cost, quality, loads, lam1=lam1)
+        if self.mode == "quality":
+            pt = threshold if polish_threshold is None else polish_threshold
+            x = primal_polish(x, cost, quality,
+                              jnp.asarray(pt, jnp.float32), loads)
+        else:
+            x = budget_polish(x, cost, quality,
+                              jnp.asarray(threshold, jnp.float32), loads)
+        return x, info
+
+
+# --- legacy entry points: thin wrappers over the one DualSolver code path ---
+
+def solve_assignment(cost, quality, alpha, loads, *, iters: int = 150,
+                     lr_quality: float = 4.0, lr_workload: float = 0.5,
+                     use_kernel: bool = False):
+    """Quality-constrained mode. Returns (assignment (N,), SolveInfo)."""
+    return DualSolver("quality", iters, lr_quality, lr_workload,
+                      use_kernel).solve(cost, quality, alpha, loads)
+
+
+def solve_budget(cost, quality, budget, loads, *, iters: int = 150,
+                 lr_budget: float = 50.0, lr_workload: float = 0.5,
+                 use_kernel: bool = False):
     """Budget mode: max (1/N)Σ a_ij x_ij  s.t. Σ c_ij x_ij <= B, loads."""
+    return DualSolver("budget", iters, lr_budget, lr_workload,
+                      use_kernel).solve(cost, quality, budget, loads)
+
+
+# --- device-resident post-solve feasibility pass ------------------------------
+
+@jax.jit
+def repair_workload(x, cost, quality, loads, lam1=0.0):
+    """Enforce Σ_i x_ij <= L_j exactly by moving the cheapest-to-move queries
+    off overloaded models (the scheduler must never violate concurrency
+    limits).  One move per ``while_loop`` iteration: pick the most overloaded
+    model, move its lowest-regret query to that query's best free model.
+    NumPy oracle: ``repro.kernels.lagrangian_assign.ref.repair_workload_ref``.
+    """
     n, m = cost.shape
-    cost = cost.astype(jnp.float32)
-    quality = quality.astype(jnp.float32)
-    loads = loads.astype(jnp.float32)
+    x = jnp.asarray(x, jnp.int32)
+    cost = jnp.asarray(cost, jnp.float32)
+    quality = jnp.asarray(quality, jnp.float32)
+    loads = jnp.asarray(loads, jnp.float32)
+    reduced = cost - lam1 * quality / n
+    counts0 = jnp.zeros((m,), jnp.float32).at[x].add(1.0)
+    inf = jnp.float32(jnp.inf)
 
-    def body(t, carry):
-        mu, lam2, best_q, best_x, found = carry
-        scores = -quality + mu * cost + lam2[None, :]
-        x = jnp.argmin(scores, axis=1)
-        c = jnp.take_along_axis(cost, x[:, None], axis=1).sum()
-        q = jnp.take_along_axis(quality, x[:, None], axis=1).mean()
-        cnt = jnp.zeros((m,), jnp.float32).at[x].add(1.0)
-        feasible = (c <= budget) & jnp.all(cnt <= loads)
-        better = feasible & (q > best_q)
-        best_q = jnp.where(better, q, best_q)
-        best_x = jnp.where(better, x, best_x)
-        found = found | feasible
-        step = 1.0 / jnp.sqrt(1.0 + t.astype(jnp.float32))
-        mu = jnp.maximum(mu + lr_budget * step * (c - budget), 0.0)
-        lam2 = jnp.maximum(lam2 + lr_workload * step * (cnt - loads), 0.0)
-        return mu, lam2, best_q, best_x, found
+    def cond(carry):
+        _, _, done, k = carry
+        return (~done) & (k < n)
 
-    init = (jnp.zeros(()), jnp.zeros((m,)), jnp.asarray(-jnp.inf),
-            jnp.zeros((n,), jnp.int32), jnp.asarray(False))
-    mu, lam2, best_q, best_x, found = jax.lax.fori_loop(0, iters, body, init)
-    scores = -quality + mu * cost + lam2[None, :]
-    x_last = jnp.argmin(scores, axis=1)
-    x = jnp.where(found, best_x, x_last)
-    return x, {"mu": mu, "lambda2": lam2, "feasible": found}
+    def body(carry):
+        x, counts, _, k = carry
+        over = counts - loads
+        j = jnp.argmax(over)
+        free = counts < loads
+        # regret of moving each query off j to its best free alternative
+        alt = jnp.where(free[None, :], reduced, inf)
+        best_alt = jnp.argmin(alt, axis=1)
+        alt_min = jnp.take_along_axis(alt, best_alt[:, None], axis=1)[:, 0]
+        delta = jnp.where(x == j, alt_min - reduced[:, j], inf)
+        qi = jnp.argmin(delta)
+        nj = best_alt[qi]
+        do = (over[j] > 0) & jnp.any(free)   # saturated pool -> give up
+        x_new = x.at[qi].set(nj.astype(jnp.int32))
+        counts_new = counts.at[j].add(-1.0).at[nj].add(1.0)
+        x = jnp.where(do, x_new, x)
+        counts = jnp.where(do, counts_new, counts)
+        return x, counts, ~do, k + 1
 
-
-def repair_workload(x: np.ndarray, cost: np.ndarray, quality: np.ndarray,
-                    loads: np.ndarray, lam1: float = 0.0) -> np.ndarray:
-    """Host-side greedy repair: enforce Σ_i x_ij <= L_j exactly by moving the
-    cheapest-to-move queries off overloaded models (used by the scheduler,
-    which must never violate concurrency limits)."""
-    x = np.asarray(x).copy()
-    n, m = cost.shape
-    loads = np.asarray(loads, dtype=int)
-    counts = np.bincount(x, minlength=m)
-    reduced = cost - lam1 * quality / max(n, 1)
-    for j in np.argsort(-counts):
-        while counts[j] > loads[j]:
-            assigned = np.where(x == j)[0]
-            free = np.where(counts < loads)[0]
-            if len(free) == 0:
-                return x  # system saturated; caller queues the overflow
-            # move the query whose best alternative costs least extra
-            alt_cost = reduced[assigned][:, free]
-            best_alt = alt_cost.argmin(axis=1)
-            delta = alt_cost[np.arange(len(assigned)), best_alt] - \
-                reduced[assigned, j]
-            pick = delta.argmin()
-            qi, nj = assigned[pick], free[best_alt[pick]]
-            x[qi] = nj
-            counts[j] -= 1
-            counts[nj] += 1
+    x, _, _, _ = jax.lax.while_loop(
+        cond, body, (x, counts0, jnp.asarray(False), jnp.asarray(0)))
     return x
 
 
-def primal_polish(x: np.ndarray, cost: np.ndarray, quality: np.ndarray,
-                  alpha: float, loads: np.ndarray, sweeps: int = 4) -> np.ndarray:
-    """Greedy primal improvement: move queries to cheaper models whenever the
-    quality constraint's slack and the target's capacity allow it. Closes most
-    of the subgradient method's duality gap (dual iterates only visit argmin
-    assignments, which need not contain the primal optimum)."""
-    x = np.asarray(x).copy()
+@jax.jit
+def primal_polish(x, cost, quality, alpha, loads):
+    """Greedy primal improvement, fully on device.  Phase 0 restores quality
+    feasibility (best quality-gain-per-dollar moves); phase 1 is steepest-
+    descent cost reduction (apply the single largest saving whose quality
+    delta fits the constraint slack and whose target has capacity, until no
+    improving move remains).  Closes most of the subgradient method's duality
+    gap.  NumPy oracle: ``...lagrangian_assign.ref.primal_polish_ref``."""
     n, m = cost.shape
-    counts = np.bincount(x, minlength=m).astype(float)
-    qual_sum = quality[np.arange(n), x].sum()
-    # phase 0 — restore quality feasibility if the dual left us short: move
-    # queries to higher-quality models, best quality-gain-per-dollar first
-    guard = 0
-    while qual_sum < n * alpha - 1e-9 and guard < 4 * n:
-        guard += 1
-        gain = quality - quality[np.arange(n), x][:, None]       # (N, M)
-        extra = cost - cost[np.arange(n), x][:, None]
+    x = jnp.asarray(x, jnp.int32)
+    cost = jnp.asarray(cost, jnp.float32)
+    quality = jnp.asarray(quality, jnp.float32)
+    loads = jnp.asarray(loads, jnp.float32)
+    counts0 = jnp.zeros((m,), jnp.float32).at[x].add(1.0)
+    qsum0 = jnp.take_along_axis(quality, x[:, None], axis=1).sum()
+    ninf = jnp.float32(-jnp.inf)
+    inf = jnp.float32(jnp.inf)
+
+    def apply_move(x, counts, qsum, i, j, do):
+        dq = quality[i, j] - quality[i, x[i]]
+        x_new = x.at[i].set(j.astype(jnp.int32))
+        counts_new = counts.at[x[i]].add(-1.0).at[j].add(1.0)
+        return (jnp.where(do, x_new, x), jnp.where(do, counts_new, counts),
+                jnp.where(do, qsum + dq, qsum))
+
+    # phase 0 — restore quality feasibility if the dual left us short
+    def cond0(carry):
+        _, _, qsum, done, k = carry
+        return (qsum < n * alpha - 1e-9) & (~done) & (k < 4 * n)
+
+    def body0(carry):
+        x, counts, qsum, _, k = carry
+        curq = jnp.take_along_axis(quality, x[:, None], axis=1)
+        curc = jnp.take_along_axis(cost, x[:, None], axis=1)
+        gain = quality - curq
+        extra = cost - curc
         ok = (gain > 1e-12) & (counts[None, :] < loads[None, :])
-        if not ok.any():
-            break
-        score = np.where(ok, gain / np.maximum(extra, 1e-9), -np.inf)
-        i, j = np.unravel_index(np.argmax(score), score.shape)
-        counts[x[i]] -= 1
-        counts[j] += 1
-        qual_sum += quality[i, j] - quality[i, x[i]]
-        x[i] = j
-    for _ in range(sweeps):
-        improved = False
-        order = np.argsort(-(cost[np.arange(n), x]))  # expensive queries first
-        for i in order:
-            cur = x[i]
-            slack = qual_sum - n * alpha
-            deltas = cost[i] - cost[i, cur]                 # <0 == cheaper
-            ok = (deltas < -1e-12) & (counts < loads) & \
-                 (quality[i] - quality[i, cur] >= -slack - 1e-12)
-            ok[cur] = False
-            if ok.any():
-                j = int(np.flatnonzero(ok)[np.argmin(deltas[ok])])
-                counts[cur] -= 1
-                counts[j] += 1
-                qual_sum += quality[i, j] - quality[i, cur]
-                x[i] = j
-                improved = True
-        if not improved:
-            break
+        score = jnp.where(ok, gain / jnp.maximum(extra, 1e-9), ninf)
+        flat = jnp.argmax(score)
+        i, j = flat // m, flat % m
+        do = score.reshape(-1)[flat] > ninf
+        x, counts, qsum = apply_move(x, counts, qsum, i, j, do)
+        return x, counts, qsum, ~do, k + 1
+
+    x, counts, qsum, _, _ = jax.lax.while_loop(
+        cond0, body0, (x, counts0, qsum0, jnp.asarray(False), jnp.asarray(0)))
+
+    # phase 1 — steepest-descent cost reduction within the quality slack
+    def cond1(carry):
+        _, _, _, done, k = carry
+        return (~done) & (k < 8 * n)
+
+    def body1(carry):
+        x, counts, qsum, _, k = carry
+        curq = jnp.take_along_axis(quality, x[:, None], axis=1)
+        curc = jnp.take_along_axis(cost, x[:, None], axis=1)
+        slack = qsum - n * alpha
+        delta = cost - curc                   # <0 == cheaper
+        dq = quality - curq
+        ok = (delta < -1e-12) & (counts[None, :] < loads[None, :]) & \
+            (dq >= -slack - 1e-12)
+        score = jnp.where(ok, delta, inf)
+        flat = jnp.argmin(score)
+        i, j = flat // m, flat % m
+        do = score.reshape(-1)[flat] < inf
+        x, counts, qsum = apply_move(x, counts, qsum, i, j, do)
+        return x, counts, qsum, ~do, k + 1
+
+    x, _, _, _, _ = jax.lax.while_loop(
+        cond1, body1, (x, counts, qsum, jnp.asarray(False), jnp.asarray(0)))
     return x
 
 
-def brute_force(cost: np.ndarray, quality: np.ndarray, alpha: float,
-                loads: np.ndarray) -> Optional[np.ndarray]:
-    """Exact solver for tiny instances (test oracle)."""
+@jax.jit
+def budget_polish(x, cost, quality, budget, loads):
+    """Budget-mode primal improvement (symmetric to ``primal_polish``).
+
+    Phase 0 restores budget feasibility when the dual left us over budget
+    (e.g. an infeasible B): repeatedly apply the cost-reducing move that
+    loses the least quality per dollar saved.  Phase 1 is steepest quality
+    ascent — apply the single largest quality gain whose extra cost fits the
+    remaining budget and whose target model has capacity.
+    NumPy oracle: ``...lagrangian_assign.ref.budget_polish_ref``."""
+    n, m = cost.shape
+    x = jnp.asarray(x, jnp.int32)
+    cost = jnp.asarray(cost, jnp.float32)
+    quality = jnp.asarray(quality, jnp.float32)
+    loads = jnp.asarray(loads, jnp.float32)
+    counts0 = jnp.zeros((m,), jnp.float32).at[x].add(1.0)
+    csum0 = jnp.take_along_axis(cost, x[:, None], axis=1).sum()
+    ninf = jnp.float32(-jnp.inf)
+
+    def apply_move(x, counts, csum, i, j, do):
+        dc = cost[i, j] - cost[i, x[i]]
+        x_new = x.at[i].set(j.astype(jnp.int32))
+        counts_new = counts.at[x[i]].add(-1.0).at[j].add(1.0)
+        return (jnp.where(do, x_new, x), jnp.where(do, counts_new, counts),
+                jnp.where(do, csum + dc, csum))
+
+    def cond0(carry):
+        _, _, csum, done, k = carry
+        return (csum > budget + 1e-9) & (~done) & (k < 4 * n)
+
+    def body0(carry):
+        x, counts, csum, _, k = carry
+        curq = jnp.take_along_axis(quality, x[:, None], axis=1)
+        curc = jnp.take_along_axis(cost, x[:, None], axis=1)
+        dq = quality - curq
+        dc = cost - curc
+        ok = (dc < -1e-12) & (counts[None, :] < loads[None, :])
+        # least quality lost per dollar saved
+        score = jnp.where(ok, dq / jnp.maximum(-dc, 1e-9), ninf)
+        flat = jnp.argmax(score)
+        i, j = flat // m, flat % m
+        do = score.reshape(-1)[flat] > ninf
+        x, counts, csum = apply_move(x, counts, csum, i, j, do)
+        return x, counts, csum, ~do, k + 1
+
+    x, counts0, csum0, _, _ = jax.lax.while_loop(
+        cond0, body0, (x, counts0, csum0, jnp.asarray(False), jnp.asarray(0)))
+
+    def cond(carry):
+        _, _, _, done, k = carry
+        return (~done) & (k < 8 * n)
+
+    def body(carry):
+        x, counts, csum, _, k = carry
+        curq = jnp.take_along_axis(quality, x[:, None], axis=1)
+        curc = jnp.take_along_axis(cost, x[:, None], axis=1)
+        dq = quality - curq
+        dc = cost - curc
+        ok = (dq > 1e-12) & (counts[None, :] < loads[None, :]) & \
+            (csum + dc <= budget + 1e-9)
+        score = jnp.where(ok, dq, ninf)
+        flat = jnp.argmax(score)
+        i, j = flat // m, flat % m
+        do = score.reshape(-1)[flat] > ninf
+        x, counts, csum = apply_move(x, counts, csum, i, j, do)
+        return x, counts, csum, ~do, k + 1
+
+    x, _, _, _, _ = jax.lax.while_loop(
+        cond, body, (x, counts0, csum0, jnp.asarray(False), jnp.asarray(0)))
+    return x
+
+
+def brute_force(cost: np.ndarray, quality: np.ndarray, threshold: float,
+                loads: np.ndarray, mode: str = "quality"
+                ) -> Optional[np.ndarray]:
+    """Exact solver for tiny instances (test oracle), both modes."""
     import itertools
     n, m = cost.shape
-    best, best_c = None, np.inf
+    best, best_obj = None, np.inf
     for x in itertools.product(range(m), repeat=n):
         x = np.array(x)
         if np.any(np.bincount(x, minlength=m) > loads):
             continue
-        if quality[np.arange(n), x].mean() < alpha:
-            continue
+        q = quality[np.arange(n), x].mean()
         c = cost[np.arange(n), x].sum()
-        if c < best_c:
-            best, best_c = x, c
+        if mode == "quality":
+            if q < threshold:
+                continue
+            obj = c
+        else:
+            if c > threshold:
+                continue
+            obj = -q * n
+        if obj < best_obj:
+            best, best_obj = x, obj
     return best

@@ -170,16 +170,20 @@ class TrainedPredictor:
         self.params = params
         return losses
 
-    def predict_arrays(self, ds: QAServe):
-        """Returns (capability (N,M), expected_out_len (N,M), cost (N,M))."""
+    def predict_arrays(self, ds):
+        """Returns (capability (N,M), expected_out_len (N,M), cost (N,M)).
+
+        ``ds`` is anything exposing the RouteBatch feature surface
+        (queries, input_len, price_in, price_out): a QAServe or a RouteBatch.
+        """
         toks = jnp.asarray(tokenizer.encode_batch(ds.queries, self.cfg.max_len))
         cap, len_probs = jax.jit(lambda t: predict(self.cfg, self.params, t))(toks)
         cap = np.asarray(cap)
+        n, m = cap.shape
         exp_len = bucket_expectation(np.asarray(len_probs).reshape(
-            ds.n * ds.m, -1), self.cfg.n_buckets).reshape(ds.n, ds.m)
-        pin = np.array([p.price_in for p in ds.pool])
-        pout = np.array([p.price_out for p in ds.pool])
-        cost = (ds.input_len[:, None] * pin + exp_len * pout) / 1000.0
+            n * m, -1), self.cfg.n_buckets).reshape(n, m)
+        cost = (np.asarray(ds.input_len)[:, None] * ds.price_in
+                + exp_len * ds.price_out) / 1000.0
         return cap, exp_len, cost
 
     def eval_accuracy(self, ds: QAServe) -> Dict[str, float]:

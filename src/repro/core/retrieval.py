@@ -66,8 +66,12 @@ class RetrievalPredictor:
         self.pool = ds.pool
         return self
 
-    def predict_arrays(self, ds: QAServe):
-        """Returns (capability (N,M), expected_out_len (N,M), cost (N,M))."""
+    def predict_arrays(self, ds):
+        """Returns (capability (N,M), expected_out_len (N,M), cost (N,M)).
+
+        ``ds`` is anything exposing the RouteBatch feature surface
+        (queries, input_len, price_in, price_out): a QAServe or a RouteBatch.
+        """
         q = jnp.asarray(featurize(ds.queries, self.d))
         if self.use_kernel:
             from repro.kernels.topk_retrieval.ops import topk_retrieval
@@ -77,9 +81,8 @@ class RetrievalPredictor:
         idx = np.asarray(idx)
         cap = self.correct[idx].mean(axis=1)        # (N, k, M) -> (N, M)
         exp_len = self.out_len[idx].mean(axis=1)
-        pin = np.array([p.price_in for p in ds.pool])
-        pout = np.array([p.price_out for p in ds.pool])
-        cost = (ds.input_len[:, None] * pin + exp_len * pout) / 1000.0
+        cost = (np.asarray(ds.input_len)[:, None] * ds.price_in
+                + exp_len * ds.price_out) / 1000.0
         return np.asarray(cap), exp_len, cost
 
     def eval_accuracy(self, ds: QAServe, n_buckets: int = 10) -> Dict[str, float]:

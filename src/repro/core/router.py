@@ -1,4 +1,9 @@
-"""OmniRouter facade: two-stage routing (predict → constrained optimize)."""
+"""OmniRouter facade: two-stage routing (predict → constrained optimize).
+
+``route`` consumes the array-based :class:`RouteBatch` contract and runs the
+whole optimize→repair→polish pipeline on device (jit-compiled; no per-query
+Python loops) via :class:`repro.core.optimizer.DualSolver`.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -9,9 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.qaserve import QAServe
-from .baselines import Policy
-from .optimizer import (primal_polish, repair_workload, solve_assignment,
-                        solve_budget)
+from .baselines import Policy, RouteBatch
+from .optimizer import DualSolver
 
 
 @dataclasses.dataclass
@@ -20,8 +24,9 @@ class RouterConfig:
     budget: Optional[float] = None   # set -> budget-controllable mode
     iters: int = 150
     lr_quality: float = 4.0
+    lr_budget: float = 50.0
     lr_workload: float = 0.5
-    use_assign_kernel: bool = False
+    use_assign_kernel: bool = False  # fused Pallas path (1 launch per solve)
     # beyond-paper robustness: tighten the predicted-quality constraint by a
     # small margin during primal polish so prediction noise doesn't push the
     # realized SR below alpha (optimizing to the boundary of a *predicted*
@@ -37,44 +42,32 @@ class OmniRouter(Policy):
         self.predictor = predictor
         self.cfg = cfg
         self.name = name
+        mode = "budget" if cfg.budget is not None else "quality"
+        self.solver = DualSolver(
+            mode=mode, iters=cfg.iters,
+            lr_constraint=cfg.lr_budget if mode == "budget" else cfg.lr_quality,
+            lr_workload=cfg.lr_workload, use_kernel=cfg.use_assign_kernel)
         self.route_seconds = 0.0    # scheduling-overhead accounting (Fig. 3)
         self.predict_seconds = 0.0
 
     def prepare(self, train_ds: QAServe):
         return self
 
-    def route(self, ds: QAServe, loads: np.ndarray,
-              counts: Optional[np.ndarray] = None, rng=None) -> np.ndarray:
+    def route(self, batch: RouteBatch, rng=None) -> np.ndarray:
         t0 = time.perf_counter()
-        cap, _, cost = self.predictor.predict_arrays(ds)
+        cap, _, cost = self.predictor.predict_arrays(batch)
         t1 = time.perf_counter()
         self.predict_seconds += t1 - t0
-        avail = np.asarray(loads, float)
-        if counts is not None:
-            avail = np.maximum(avail - counts, 0.0)
-        if self.cfg.use_assign_kernel:
-            from repro.kernels.lagrangian_assign.ops import solve_assignment_kernel
-            x, info = solve_assignment_kernel(
-                jnp.asarray(cost), jnp.asarray(cap), self.cfg.alpha,
-                jnp.asarray(avail), iters=self.cfg.iters,
-                lr_quality=self.cfg.lr_quality, lr_workload=self.cfg.lr_workload)
-        elif self.cfg.budget is not None:
-            x, info = solve_budget(jnp.asarray(cost), jnp.asarray(cap),
-                                   self.cfg.budget, jnp.asarray(avail),
-                                   iters=self.cfg.iters)
+        avail = batch.available
+        if self.cfg.budget is not None:
+            threshold, polish_threshold = self.cfg.budget, None
         else:
-            x, info = solve_assignment(jnp.asarray(cost), jnp.asarray(cap),
-                                       self.cfg.alpha, jnp.asarray(avail),
-                                       iters=self.cfg.iters,
-                                       lr_quality=self.cfg.lr_quality,
-                                       lr_workload=self.cfg.lr_workload)
+            threshold = self.cfg.alpha
+            polish_threshold = min(self.cfg.alpha + self.cfg.alpha_margin, 1.0)
+        x, _ = self.solver.route_arrays(
+            jnp.asarray(cost), jnp.asarray(cap), threshold,
+            jnp.asarray(avail), polish_threshold=polish_threshold)
         x = np.asarray(x)
-        lam1 = float(np.asarray(info.get("lambda1", 0.0)))
-        x = repair_workload(x, cost, cap, avail, lam1=lam1)
-        if self.cfg.budget is None:
-            x = primal_polish(x, cost, cap,
-                              min(self.cfg.alpha + self.cfg.alpha_margin, 1.0),
-                              avail)
         self.route_seconds += time.perf_counter() - t1
         return x
 
@@ -82,6 +75,7 @@ class OmniRouter(Policy):
 def evaluate_assignment(ds: QAServe, x: np.ndarray) -> Dict[str, float]:
     """True SR and true $ cost of an assignment (uses ground truth)."""
     n = ds.n
+    x = np.asarray(x)
     sr = float(ds.correct[np.arange(n), x].mean())
     cost = float(ds.cost_matrix()[np.arange(n), x].sum())
     return {"success_rate": sr, "cost": cost}

@@ -6,8 +6,15 @@ service time of a job is out_len / tokens_per_sec_j (+ queueing). Streaming is
 batching with batch size 1 (paper's "common practice"). A unified capacity
 control caps in-flight jobs at half the total workload capacity (paper §4.2).
 
-The same Scheduler drives the real serving engine (repro.serving) by swapping
-the simulated endpoint for a model-backed one.
+Routing goes through the array-based :class:`RouteBatch` contract
+(``route_via_batch``) — the same admission/routing path the real serving
+engine (``repro.serving.engine``) uses.
+
+Hedging fires while the straggler is still *in flight*: whenever the clock
+advances (admission or a completion), any un-hedged in-flight job whose
+remaining time ``ft - t`` exceeds ``hedge_factor ×`` the median service time
+is duplicated on the least-loaded endpoint.  The first finisher wins and the
+sibling copy is cancelled (its capacity freed immediately).
 """
 from __future__ import annotations
 
@@ -29,7 +36,7 @@ class SchedulerConfig:
     loads: int = 4                  # L per model (paper default)
     tokens_per_sec: float = 60.0    # endpoint decode speed
     hedge: bool = False             # straggler mitigation: duplicate dispatch
-    hedge_factor: float = 3.0       # hedge when job exceeds factor x median
+    hedge_factor: float = 3.0       # hedge when remaining > factor x median
     seed: int = 0
 
 
@@ -46,6 +53,19 @@ class ServeResult:
     hedged: int = 0
 
 
+def route_via_batch(policy: Policy, ds_like, loads, counts, rng=None
+                    ) -> np.ndarray:
+    """The one admission/routing path shared by the simulator and the real
+    engine: produce a RouteBatch from the admitted queries + fleet state and
+    hand it to the policy.  Ground-truth arrays are materialized only for
+    policies that declare they need them (Oracle) — a live engine has no
+    truth, and building it would inflate the measured routing overhead."""
+    batch = ds_like.route_batch(np.asarray(loads, float), counts,
+                                with_truth=getattr(policy, "needs_truth",
+                                                   False))
+    return np.asarray(policy.route(batch, rng=rng)).astype(int)
+
+
 def run_serving(ds: QAServe, policy: Policy, cfg: SchedulerConfig) -> ServeResult:
     rng = np.random.RandomState(cfg.seed)
     n, m = ds.n, ds.m
@@ -59,18 +79,50 @@ def run_serving(ds: QAServe, policy: Policy, cfg: SchedulerConfig) -> ServeResul
     true_service = ds.out_len / cfg.tokens_per_sec   # (N, M) seconds
 
     counts = np.zeros(m, int)          # in-flight per model
-    done_q: List = []                  # (finish_time, qi, j, hedged)
+    done_q: List = []                  # (finish_time, event_id, qi, j)
+    cancelled = set()                  # event ids whose capacity was freed
+    live: Dict[int, List] = {}         # qi -> [(event_id, j), ...] in flight
     waiting = list(range(n))
     t = 0.0
     sched_secs = 0.0
     llm_secs = 0.0
     hedged = 0
+    next_eid = 0
     assign = np.full(n, -1, int)
     completed = np.zeros(n, bool)
+    hedged_q = np.zeros(n, bool)
     service_seen: List[float] = []
 
     def inflight() -> int:
         return int(counts.sum())
+
+    def dispatch(qi: int, j: int):
+        nonlocal llm_secs, next_eid
+        counts[j] += 1
+        dur = float(true_service[qi, j])
+        llm_secs += dur
+        heapq.heappush(done_q, (t + dur, next_eid, qi, j))
+        live.setdefault(qi, []).append((next_eid, j, t + dur))
+        next_eid += 1
+
+    def maybe_hedge():
+        """Duplicate un-hedged in-flight stragglers (remaining time vs the
+        median service seen so far) on the least-loaded endpoint."""
+        nonlocal hedged
+        if not cfg.hedge or not service_seen:
+            return
+        med = float(np.median(service_seen))
+        for ft, eid, qi, j in list(done_q):
+            if (eid in cancelled or completed[qi] or hedged_q[qi]
+                    or (ft - t) <= cfg.hedge_factor * med):
+                continue
+            if not np.any(counts < loads):
+                return
+            alt = int(np.argmax(loads - counts))
+            if alt != j and counts[alt] < loads[alt]:
+                hedged_q[qi] = True
+                hedged += 1
+                dispatch(qi, alt)
 
     while waiting or done_q:
         # admit a batch when capacity allows
@@ -82,7 +134,7 @@ def run_serving(ds: QAServe, policy: Policy, cfg: SchedulerConfig) -> ServeResul
             waiting[:] = waiting[take:]
             sub = ds.subset(np.array(idx))
             t0 = time.perf_counter()
-            x = policy.route(sub, loads, counts=counts, rng=rng)
+            x = route_via_batch(policy, sub, loads, counts, rng=rng)
             sched_secs += time.perf_counter() - t0
             for qi, j in zip(idx, x):
                 j = int(j)
@@ -91,35 +143,29 @@ def run_serving(ds: QAServe, policy: Policy, cfg: SchedulerConfig) -> ServeResul
                     waiting.append(qi)
                     continue
                 assign[qi] = j
-                counts[j] += 1
-                dur = float(true_service[qi, j])
-                llm_secs += dur
-                heapq.heappush(done_q, (t + dur, qi, j, False))
+                dispatch(qi, j)
+            maybe_hedge()
             continue
         if not done_q:
-            if waiting:     # fully saturated: jump to next completion
-                # should not happen (done_q nonempty when counts>0)
-                break
             break
-        # straggler hedging: if the soonest-finishing job is a straggler vs
-        # the median seen so far, duplicate it on the least-loaded endpoint
-        ft, qi, j, was_hedged = heapq.heappop(done_q)
-        if (cfg.hedge and service_seen and not was_hedged
-                and (ft - t) > cfg.hedge_factor * np.median(service_seen)
-                and np.any(counts < loads)):
-            alt = int(np.argmax(loads - counts))
-            if alt != j and counts[alt] < loads[alt]:
-                counts[alt] += 1
-                dur = float(true_service[qi, alt])
-                llm_secs += dur
-                hedged += 1
-                heapq.heappush(done_q, (t + dur, qi, alt, True))
+        ft, eid, qi, j = heapq.heappop(done_q)
+        if eid in cancelled:        # sibling won; capacity already freed
+            cancelled.discard(eid)
+            live[qi] = [e for e in live.get(qi, []) if e[0] != eid]
+            continue
         t = max(t, ft)
         service_seen.append(float(true_service[qi, j]))
+        counts[j] -= 1
+        live[qi] = [e for e in live.get(qi, []) if e[0] != eid]
         if not completed[qi]:
             completed[qi] = True
             assign[qi] = j          # first finisher wins (hedge semantics)
-        counts[j] -= 1
+            for sid, sj, sft in live.get(qi, []):
+                cancelled.add(sid)  # kill the straggler copy now
+                counts[sj] -= 1
+                llm_secs -= max(sft - t, 0.0)   # un-charge unexecuted tail
+            live[qi] = []
+        maybe_hedge()
 
     ok = assign >= 0
     idxs = np.flatnonzero(ok)
@@ -133,8 +179,6 @@ def run_serving(ds: QAServe, policy: Policy, cfg: SchedulerConfig) -> ServeResul
         if mask.any():
             pm_correct[j] = ds.correct[idxs[mask], j].mean()
             pm_cost[j] = cost_mat[idxs[mask], j].sum()
-    if isinstance(policy, object) and hasattr(policy, "route_seconds"):
-        sched_secs += 0.0  # router tracks its own split; total includes route()
     return ServeResult(
         success_rate=sr, cost=total_cost, makespan=t,
         scheduling_seconds=sched_secs, llm_seconds=llm_secs,

@@ -71,12 +71,35 @@ class QAServe:
     def m(self) -> int:
         return len(self.pool)
 
+    @property
+    def price_in(self) -> np.ndarray:
+        """(M,) $ per 1k input tokens (same field as RouteBatch.price_in)."""
+        return np.array([p.price_in for p in self.pool])
+
+    @property
+    def price_out(self) -> np.ndarray:
+        return np.array([p.price_out for p in self.pool])
+
     def cost_matrix(self) -> np.ndarray:
         """$ cost of each (query, model) pair with TRUE output lengths."""
-        pin = np.array([p.price_in for p in self.pool])
-        pout = np.array([p.price_out for p in self.pool])
-        return (self.input_len[:, None] * pin[None, :]
-                + self.out_len * pout[None, :]) / 1000.0
+        return (self.input_len[:, None] * self.price_in[None, :]
+                + self.out_len * self.price_out[None, :]) / 1000.0
+
+    def route_batch(self, loads, counts=None, *, with_truth: bool = True):
+        """Produce the array-based routing request the Policy contract
+        consumes (QAServe is one producer of RouteBatch, not the interface)."""
+        from repro.core.baselines import RouteBatch
+        m = self.m
+        return RouteBatch(
+            queries=self.queries,
+            input_len=np.asarray(self.input_len),
+            price_in=self.price_in, price_out=self.price_out,
+            loads=np.asarray(loads, float),
+            counts=(np.zeros(m, float) if counts is None
+                    else np.asarray(counts, float)),
+            cost_true=self.cost_matrix() if with_truth else None,
+            correct_true=self.correct.astype(float) if with_truth else None,
+        )
 
     def split(self, train=0.7, val=0.2, seed=0):
         rng = np.random.RandomState(seed)

@@ -1,22 +1,260 @@
-"""Fused Lagrangian assignment step (ECCOS optimizer inner loop, Eq. 11-12).
+"""Fused Lagrangian dual ascent (ECCOS optimizer, Eq. 9-12) in ONE kernel.
 
-One pass over a (BQ, M) tile of the cost/quality matrices computes the
-reduced-cost argmin, the per-model load histogram contribution, and the
-chosen-pair quality/cost sums — everything the dual update (Eq. 9-10) needs —
-without materializing the (N, M) score matrix in HBM. Grid over query blocks;
-the histogram output block is revisited (accumulated) across the grid.
+``fused_dual_solve`` runs the *entire* dual-ascent loop inside a single
+``pallas_call``: grid = (iters, query_blocks), with the scalar multiplier
+λ (or µ), the per-model workload multipliers λ2, the iteration histogram and
+the multipliers of the best-feasible iterate carried in scratch across grid
+steps.  This replaces the seed's one-``pallas_call``-per-iteration structure
+(150 launches per solve) with exactly one launch.
+
+The kernel is mode-agnostic: it sees the unified parameterization
+
+    scores_ij = A_ij + lam * B_ij + lam2_j,   feasible ⇔ Σ B[i, x_i] <= t
+
+(quality mode: A = cost, B = -quality/N, t = -alpha; budget mode:
+A = -quality, B = cost, t = B — see ``repro.core.optimizer``).
+
+No N-sized state ever crosses an iteration: instead of storing the
+best-feasible *assignment*, the kernel stores the multipliers that produced
+it — argmin is deterministic, so the caller (``ops.solve_fused``) replays
+the winning assignment from those multipliers in one vectorized argmin.
+Padded rows (N not a multiple of the query block) are masked out of every
+histogram/sum in-kernel.
+
+``assign_step_kernel`` (one fused argmin + histogram step) is kept as the
+single-step building block and micro-benchmark target.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(c_ref, a_ref, lam_ref, x_ref, cnt_ref, sums_ref, *,
-            n: int, m: int, bq: int):
+def backend_interpret(interpret: Optional[bool] = None) -> bool:
+    """Auto-select interpret mode by backend: compiled on TPU, interpreted
+    elsewhere (CPU/GPU have no Mosaic lowering for these kernels)."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+# scratch slot layout for the (8,) SMEM scalar buffer
+_LAM, _LAM_BEST, _BEST, _FOUND, _ASUM, _BSUM = range(6)
+# row layout of the (3, m) vector scratch
+_L2, _L2B, _CNT = range(3)
+
+
+def _fused_kernel(scal_ref, ab_ref, loads_ref, out_ref, smem, vec, *,
+                  n: int, m: int, bq: int, masked: bool):
+    t = pl.program_id(0)
+    b = pl.program_id(1)
+    thresh = scal_ref[0]
+    lr_eff = scal_ref[1]
+    lr_load = scal_ref[2]
+    loads = loads_ref[...]                                   # (m,)
+
+    @pl.when((t == 0) & (b == 0))
+    def _init():
+        smem[_LAM] = 0.0
+        smem[_LAM_BEST] = 0.0
+        smem[_BEST] = jnp.float32(jnp.inf)
+        smem[_FOUND] = 0.0
+        smem[_ASUM] = 0.0
+        smem[_BSUM] = 0.0
+        vec[...] = jnp.zeros_like(vec)
+
+    @pl.when((t > 0) & (b == 0))
+    def _finalize_prev_iter():
+        # iteration t-1's stats are complete: best-feasible bookkeeping +
+        # dual update (Eq. 9-10) before any block of iteration t runs
+        asum = smem[_ASUM]
+        bsum = smem[_BSUM]
+        cnt = vec[_CNT, :]
+        feasible = (bsum <= thresh) & jnp.all(cnt <= loads)
+        better = feasible & (asum < smem[_BEST])
+
+        @pl.when(better)
+        def _commit_best():
+            smem[_BEST] = asum
+            smem[_LAM_BEST] = smem[_LAM]
+            vec[_L2B, :] = vec[_L2, :]
+
+        smem[_FOUND] = jnp.where(feasible, 1.0, smem[_FOUND])
+        # diminishing step 1/sqrt(1 + (t-1)) for subgradient convergence
+        step = jax.lax.rsqrt(t.astype(jnp.float32))
+        smem[_LAM] = jnp.maximum(
+            smem[_LAM] + lr_eff * step * (bsum - thresh), 0.0)
+        vec[_L2, :] = jnp.maximum(
+            vec[_L2, :] + lr_load * step * (cnt - loads), 0.0)
+        smem[_ASUM] = 0.0
+        smem[_BSUM] = 0.0
+        vec[_CNT, :] = jnp.zeros_like(loads)
+
+    ab = ab_ref[...].astype(jnp.float32)                     # (bq, 2m)
+    a = ab[:, :m]
+    bm = ab[:, m:]
+    scores = a + smem[_LAM] * bm + vec[_L2, :][None, :]
+    x = jnp.argmin(scores, axis=1).astype(jnp.int32)         # (bq,)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bq, m), 1)
+    onehot = x[:, None] == cols
+    if masked:                                               # strip padded rows
+        rows = jax.lax.broadcasted_iota(jnp.int32, (bq, m), 0)
+        onehot = onehot & ((b * bq + rows) < n)
+    onehot = onehot.astype(jnp.float32)
+    vec[_CNT, :] += onehot.sum(axis=0)
+    smem[_ASUM] += (a * onehot).sum()
+    smem[_BSUM] += (bm * onehot).sum()
+
+    # every visit writes the (tiny) packed output; the last visit's values —
+    # the multiplier state plus the final iteration's complete statistics —
+    # are what the caller reads.  The best/last assignments themselves are
+    # recomputed OUTSIDE the kernel from these multipliers (argmin is
+    # deterministic), so no N-sized state ever leaves the loop.
+    out_ref[0] = smem[_LAM]
+    out_ref[1] = smem[_LAM_BEST]
+    out_ref[2] = smem[_BEST]
+    out_ref[3] = smem[_FOUND]
+    out_ref[4] = smem[_ASUM]
+    out_ref[5] = smem[_BSUM]
+    out_ref[6] = 0.0
+    out_ref[7] = 0.0
+    out_ref[pl.ds(8, m)] = vec[_L2, :]
+    out_ref[pl.ds(8 + m, m)] = vec[_L2B, :]
+    out_ref[pl.ds(8 + 2 * m, m)] = vec[_CNT, :]
+
+
+def _fused_kernel_whole(scal_ref, ab_ref, loads_ref, out_ref, *,
+                        m: int, bq: int, iters: int):
+    """Single-block variant: the whole instance fits one query block (which
+    also means no padded rows: bq == n), so the dual-ascent loop is a
+    fori_loop over pure values inside one grid step — no per-iteration grid
+    bookkeeping at all.  Identical float trajectory to the multi-block
+    kernel; output layout as documented in ``fused_dual_solve``."""
+    thresh = scal_ref[0]
+    lr_eff = scal_ref[1]
+    lr_load = scal_ref[2]
+    loads = loads_ref[...]
+    ab = ab_ref[...].astype(jnp.float32)
+    a = ab[:, :m]
+    bm = ab[:, m:]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bq, m), 1)
+
+    # all per-iteration statistics in one matvec: onehot_flat @ stat_mat
+    # yields [ΣA, ΣB, histogram] — fewer reductions per sequential step
+    stat_mat = jnp.concatenate(
+        [jnp.stack([a.reshape(-1), bm.reshape(-1)], axis=1),
+         jnp.tile(jnp.eye(m, dtype=jnp.float32), (bq, 1))], axis=1)
+
+    def body(t, carry):
+        lam, lam2, lam_best, lam2_best, best, found = carry
+        # assign + stats + finalize all inside the iteration (the reference
+        # flow): no cross-iteration stats carry needed with a single block
+        scores = a + lam * bm + lam2[None, :]
+        x = jnp.argmin(scores, axis=1).astype(jnp.int32)
+        onehot = (x[:, None] == cols).astype(jnp.float32)
+        stats = jnp.dot(onehot.reshape(-1), stat_mat,
+                        preferred_element_type=jnp.float32)
+        asum, bsum, cnt = stats[0], stats[1], stats[2:]
+        feasible = (bsum <= thresh) & jnp.all(cnt <= loads)
+        better = feasible & (asum < best)
+        best = jnp.where(better, asum, best)
+        lam_best = jnp.where(better, lam, lam_best)
+        lam2_best = jnp.where(better, lam2, lam2_best)
+        found = found | feasible
+        step = jax.lax.rsqrt(1.0 + t.astype(jnp.float32))
+        lam = jnp.maximum(lam + lr_eff * step * (bsum - thresh), 0.0)
+        lam2 = jnp.maximum(lam2 + lr_load * step * (cnt - loads), 0.0)
+        return lam, lam2, lam_best, lam2_best, best, found
+
+    zero_m = jnp.zeros((m,), jnp.float32)
+    init = (jnp.float32(0.0), zero_m, jnp.float32(0.0), zero_m,
+            jnp.float32(jnp.inf), jnp.asarray(False))
+    lam, lam2, lam_best, lam2_best, best, found = jax.lax.fori_loop(
+        0, iters, body, init)
+    # every iteration is fully finalized here, so out slots 4..7 and the
+    # histogram row are unused; ops.solve_fused skips its finalize for the
+    # single-block layout
+    out_ref[...] = jnp.zeros_like(out_ref)
+    out_ref[0] = lam
+    out_ref[1] = lam_best
+    out_ref[2] = best
+    out_ref[3] = found.astype(jnp.float32)
+    out_ref[pl.ds(8, m)] = lam2
+    out_ref[pl.ds(8 + m, m)] = lam2_best
+
+
+def fused_dual_solve(a_mat, b_mat, thresh, loads, *, iters: int = 150,
+                     lr_eff: float, lr_load: float, bq: int = 256,
+                     interpret: Optional[bool] = None):
+    """Run the full dual-ascent loop in one kernel launch.
+
+    a_mat/b_mat (N, M) unified score matrices; thresh scalar; loads (M,).
+    Returns (packed (8 + 3M,) f32 vector, n_query_blocks):
+    [lam, lam_best, best_objective, found, last ΣA, last ΣB, 0, 0,
+     lam2 (M,), lam2_best (M,), last histogram (M,)]
+    — the multiplier state after ``iters`` iterations (plus, for the
+    multi-block grid layout, the final iteration's statistics, which the
+    caller must still finalize).  The caller recomputes the best/last
+    assignment from the multipliers (see ``ops.solve_fused``).
+    """
+    n, m = a_mat.shape
+    bq = min(bq, n)
+    pad = (-n) % bq
+    ab = jnp.concatenate([a_mat, b_mat], axis=1)             # (N, 2M)
+    if pad:
+        ab = jnp.concatenate([ab, jnp.zeros((pad, 2 * m), ab.dtype)], axis=0)
+    nb = (n + pad) // bq
+    scal = jnp.stack([jnp.asarray(thresh, jnp.float32),
+                      jnp.asarray(lr_eff, jnp.float32),
+                      jnp.asarray(lr_load, jnp.float32)])
+
+    loads = jnp.asarray(loads, jnp.float32)
+    if nb == 1:
+        # whole instance in one block (bq == n, so no padding): run the
+        # loop inside a single grid step
+        kernel = functools.partial(_fused_kernel_whole, m=m, bq=bq,
+                                   iters=iters)
+        return pl.pallas_call(
+            kernel,
+            grid=(1,),
+            in_specs=[
+                pl.BlockSpec(memory_space=pl.ANY),           # scalars
+                pl.BlockSpec((bq, 2 * m), lambda i: (0, 0)),  # A | B packed
+                pl.BlockSpec((m,), lambda i: (0,)),          # loads
+            ],
+            out_specs=pl.BlockSpec((8 + 3 * m,), lambda i: (0,)),
+            out_shape=jax.ShapeDtypeStruct((8 + 3 * m,), jnp.float32),
+            interpret=backend_interpret(interpret),
+        )(scal, ab, loads), 1
+
+    kernel = functools.partial(_fused_kernel, n=n, m=m, bq=bq,
+                               masked=bool(pad))
+    out = pl.pallas_call(
+        kernel,
+        grid=(iters, nb),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),               # scalars
+            pl.BlockSpec((bq, 2 * m), lambda t, b: (b, 0)),  # A | B packed
+            pl.BlockSpec((m,), lambda t, b: (0,)),           # loads
+        ],
+        out_specs=pl.BlockSpec((8 + 3 * m,), lambda t, b: (0,)),
+        out_shape=jax.ShapeDtypeStruct((8 + 3 * m,), jnp.float32),
+        scratch_shapes=[
+            pltpu.SMEM((8,), jnp.float32),                   # scalar state
+            pltpu.VMEM((3, m), jnp.float32),                 # λ2 | λ2@best | histogram
+        ],
+        interpret=backend_interpret(interpret),
+    )(scal, ab, loads)
+    return out, nb
+
+
+def _step_kernel(c_ref, a_ref, lam_ref, x_ref, cnt_ref, sums_ref, *,
+                 n: int, m: int, bq: int):
     iq = pl.program_id(0)
 
     @pl.when(iq == 0)
@@ -24,15 +262,17 @@ def _kernel(c_ref, a_ref, lam_ref, x_ref, cnt_ref, sums_ref, *,
         cnt_ref[...] = jnp.zeros_like(cnt_ref)
         sums_ref[...] = jnp.zeros_like(sums_ref)
 
-    c = c_ref[...].astype(jnp.float32)                   # (BQ, M)
+    c = c_ref[...].astype(jnp.float32)                       # (BQ, M)
     a = a_ref[...].astype(jnp.float32)
     lam1 = lam_ref[0]
     lam2 = lam_ref[1:1 + m]
     scores = c - lam1 * a / n + lam2[None, :]
-    x = jnp.argmin(scores, axis=1).astype(jnp.int32)     # (BQ,)
+    x = jnp.argmin(scores, axis=1).astype(jnp.int32)         # (BQ,)
     x_ref[...] = x
-    onehot = (x[:, None] == jax.lax.broadcasted_iota(jnp.int32, (bq, m), 1))
-    onehot_f = onehot.astype(jnp.float32)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bq, m), 1)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bq, m), 0)
+    valid = (iq * bq + rows) < n                             # mask padded rows
+    onehot_f = ((x[:, None] == cols) & valid).astype(jnp.float32)
     cnt_ref[...] += onehot_f.sum(axis=0)
     qsum = (a * onehot_f).sum()
     csum = (c * onehot_f).sum()
@@ -41,22 +281,21 @@ def _kernel(c_ref, a_ref, lam_ref, x_ref, cnt_ref, sums_ref, *,
 
 
 def assign_step_kernel(cost, quality, lam1, lam2, *, bq: int = 256,
-                       interpret: bool = True):
-    """cost/quality (N, M); lam1 scalar; lam2 (M,).
-
-    Returns (x (N,), counts (M,), qsum, csum)."""
+                       interpret: Optional[bool] = None):
+    """One fused reduced-cost argmin step: cost/quality (N, M); lam1 scalar;
+    lam2 (M,).  Returns (x (N,), counts (M,), qsum, csum).  Padded rows are
+    masked from the histogram in-kernel."""
     n, m = cost.shape
     bq = min(bq, n)
     pad = (-n) % bq
     if pad:
-        # zero-pad both matrices: padded rows argmin to model 0 with zero
-        # cost/quality contribution; their histogram counts are stripped below
         cost = jnp.concatenate([cost, jnp.zeros((pad, m), cost.dtype)], axis=0)
-        quality = jnp.concatenate([quality, jnp.zeros((pad, m), quality.dtype)], 0)
+        quality = jnp.concatenate(
+            [quality, jnp.zeros((pad, m), quality.dtype)], axis=0)
     npad = cost.shape[0]
     lam = jnp.concatenate([jnp.reshape(lam1, (1,)), lam2]).astype(jnp.float32)
 
-    kernel = functools.partial(_kernel, n=n, m=m, bq=bq)
+    kernel = functools.partial(_step_kernel, n=n, m=m, bq=bq)
     x, counts, sums = pl.pallas_call(
         kernel,
         grid=(npad // bq,),
@@ -75,10 +314,6 @@ def assign_step_kernel(cost, quality, lam1, lam2, *, bq: int = 256,
             jax.ShapeDtypeStruct((m,), jnp.float32),
             jax.ShapeDtypeStruct((2,), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=backend_interpret(interpret),
     )(cost, quality, lam)
-    # strip padded rows from the histogram (their cost/quality sums are 0)
-    if pad:
-        extra = jnp.zeros((m,), jnp.float32).at[x[n:]].add(1.0)
-        counts = counts - extra
     return x[:n], counts, sums[0], sums[1]

@@ -1,4 +1,10 @@
-"""Kernel-backed ECCOS dual solver: same contract as core.optimizer.solve_assignment."""
+"""Kernel-backed ECCOS dual solver: same contract as ``core.optimizer``.
+
+``solve_fused`` issues exactly ONE ``pallas_call`` per solve — the whole
+dual-ascent loop (all iterations, best-feasible tracking, final emit) runs
+inside ``fused_dual_solve``.  The seed implementation launched one kernel per
+dual iteration (150 launches per solve); that structure is gone.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -6,40 +12,78 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .kernel import assign_step_kernel
+from repro.core.optimizer import SolveInfo, _mode_params
+
+from .kernel import fused_dual_solve
 
 
-@partial(jax.jit, static_argnames=("iters",))
-def solve_assignment_kernel(cost, quality, alpha, loads, *, iters: int = 150,
-                            lr_quality: float = 4.0, lr_workload: float = 0.5):
+@partial(jax.jit, static_argnames=("mode", "iters", "bq", "interpret"))
+def solve_fused(cost, quality, threshold, loads, *, mode: str = "quality",
+                iters: int = 150, lr_con: float = 4.0, lr_load: float = 0.5,
+                bq: int = 256, interpret=None):
+    """Fused-kernel dual solve.  Returns (x (N,), SolveInfo) — the same
+    uniform schema as the jit reference (``DualSolver.solve``)."""
     n, m = cost.shape
-    cost = cost.astype(jnp.float32)
-    quality = quality.astype(jnp.float32)
-    loads = loads.astype(jnp.float32)
-    interp = jax.default_backend() != "tpu"
+    cost = jnp.asarray(cost, jnp.float32)
+    quality = jnp.asarray(quality, jnp.float32)
+    loads = jnp.asarray(loads, jnp.float32)
+    budget_mode = mode == "budget"
+    a_mat, b_mat, t_eff, lr_eff = _mode_params(
+        cost, quality, threshold, lr_con, budget_mode=budget_mode)
 
-    def body(t, carry):
-        lam1, lam2, best_cost, best_x, found = carry
-        x, counts, qsum, csum = assign_step_kernel(
-            cost, quality, lam1, lam2, interpret=interp)
-        q = qsum / n
-        feasible = (q >= alpha) & jnp.all(counts <= loads)
-        better = feasible & (csum < best_cost)
-        best_cost = jnp.where(better, csum, best_cost)
-        best_x = jnp.where(better, x, best_x)
-        found = found | feasible
-        step = 1.0 / jnp.sqrt(1.0 + t.astype(jnp.float32))
-        lam1 = jnp.maximum(lam1 + lr_quality * n * step * (alpha - q), 0.0)
-        lam2 = jnp.maximum(lam2 + lr_workload * step * (counts - loads), 0.0)
-        return lam1, lam2, best_cost, best_x, found
+    out, nb = fused_dual_solve(
+        a_mat, b_mat, t_eff, loads, iters=iters, lr_eff=lr_eff,
+        lr_load=lr_load, bq=bq, interpret=interpret)
+    lam, lam_b, best_obj, found_f, asum, bsum = (
+        out[0], out[1], out[2], out[3], out[4], out[5])
+    lam2 = out[8:8 + m]
+    lam2b = out[8 + m:8 + 2 * m]
 
-    init = (jnp.zeros(()), jnp.zeros((m,)), jnp.asarray(jnp.inf),
-            jnp.zeros((n,), jnp.int32), jnp.asarray(False))
-    lam1, lam2, best_cost, best_x, found = jax.lax.fori_loop(0, iters, body, init)
-    x_last, counts, qsum, csum = assign_step_kernel(
-        cost, quality, lam1, lam2, interpret=interp)
-    x = jnp.where(found, best_x, x_last)
-    info = {"lambda1": lam1, "lambda2": lam2, "feasible": found,
-            "cost": jnp.where(found, best_cost, csum), "quality": qsum / n,
-            "counts": counts}
+    if nb == 1:
+        # single-block kernel: every iteration (incl. the last) is finalized
+        # and the final dual update applied in-kernel
+        lam_fin, lam2_fin = lam, lam2
+        lam_best, lam2_best = lam_b, lam2b
+        found = found_f > 0.0
+    else:
+        cnt = out[8 + 2 * m:8 + 3 * m]
+        # finalize the last iteration (the grid kernel finalizes iteration
+        # t-1 at the start of iteration t, so iters-1 is finalized here) ...
+        feasible_last = (bsum <= t_eff) & jnp.all(cnt <= loads)
+        better_last = feasible_last & (asum < best_obj)
+        lam_best = jnp.where(better_last, lam, lam_b)
+        lam2_best = jnp.where(better_last, lam2, lam2b)
+        best_obj = jnp.where(better_last, asum, best_obj)
+        found = (found_f > 0.0) | feasible_last
+        # ... including the final dual update (step 1/sqrt(iters))
+        step = jax.lax.rsqrt(jnp.float32(iters))
+        lam_fin = jnp.maximum(lam + lr_eff * step * (bsum - t_eff), 0.0)
+        lam2_fin = jnp.maximum(lam2 + lr_load * step * (cnt - loads), 0.0)
+
+    # emit: argmin is deterministic, so the best-feasible assignment is
+    # exactly reproduced from its multipliers (no N-sized kernel state)
+    lam_sel = jnp.where(found, lam_best, lam_fin)
+    lam2_sel = jnp.where(found, lam2_best, lam2_fin)
+    x = jnp.argmin(a_mat + lam_sel * b_mat + lam2_sel[None, :],
+                   axis=1).astype(jnp.int32)
+    # onehot reductions rather than gathers (gathers are slow on CPU XLA)
+    onehot = (x[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (n, m), 1)).astype(jnp.float32)
+    asum_e = (a_mat * onehot).sum()
+    csum = (cost * onehot).sum()
+    qmean = (quality * onehot).sum() / n
+    info = SolveInfo(
+        lam=lam_fin, lam_load=lam2_fin, feasible=found, cost=csum,
+        quality=qmean, counts=onehot.sum(axis=0),
+        objective=jnp.where(found, best_obj, asum_e),
+    )
     return x, info
+
+
+def solve_assignment_kernel(cost, quality, alpha, loads, *, iters: int = 150,
+                            lr_quality: float = 4.0, lr_workload: float = 0.5,
+                            bq: int = 256):
+    """Legacy quality-mode entry point (one fused launch per solve)."""
+    return solve_fused(cost, quality, alpha, loads, mode="quality",
+                       iters=iters, lr_con=lr_quality, lr_load=lr_workload,
+                       bq=bq)

@@ -1,7 +1,16 @@
-"""Oracle for the fused Lagrangian assignment step (paper Eq. 11-12)."""
+"""Oracles for the Lagrangian assignment plane (paper Eq. 11-12).
+
+- ``assign_step_ref``: one fused reduced-cost argmin step.
+- ``repair_workload_ref`` / ``primal_polish_ref``: NumPy mirrors of the
+  device-resident (jit) feasibility pass in ``repro.core.optimizer``.  They
+  follow the exact same move-selection rules (most-overloaded model first,
+  lowest-regret query, steepest-descent polish; first-index tie-breaks in
+  float32) so parity tests can assert exact agreement.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 
 def assign_step_ref(cost, quality, lam1, lam2, n):
@@ -13,3 +22,126 @@ def assign_step_ref(cost, quality, lam1, lam2, n):
     qsum = jnp.take_along_axis(quality, x[:, None], axis=1).sum()
     csum = jnp.take_along_axis(cost, x[:, None], axis=1).sum()
     return x, counts, qsum, csum
+
+
+def repair_workload_ref(x, cost, quality, loads, lam1=0.0):
+    """Host-side oracle for ``repro.core.optimizer.repair_workload``."""
+    x = np.asarray(x).astype(np.int64).copy()
+    cost = np.asarray(cost, np.float32)
+    quality = np.asarray(quality, np.float32)
+    loads = np.asarray(loads, np.float32)
+    n, m = cost.shape
+    reduced = (cost - np.float32(lam1) * quality / np.float32(n)).astype(
+        np.float32)
+    counts = np.bincount(x, minlength=m).astype(np.float32)
+    for _ in range(n):
+        over = counts - loads
+        j = int(np.argmax(over))
+        free = counts < loads
+        if over[j] <= 0 or not free.any():
+            break  # feasible, or pool saturated (caller queues the overflow)
+        alt = np.where(free[None, :], reduced, np.float32(np.inf))
+        best_alt = alt.argmin(axis=1)
+        alt_min = alt[np.arange(n), best_alt]
+        delta = np.where(x == j, alt_min - reduced[:, j], np.float32(np.inf))
+        qi = int(np.argmin(delta))
+        nj = int(best_alt[qi])
+        x[qi] = nj
+        counts[j] -= 1.0
+        counts[nj] += 1.0
+    return x
+
+
+def primal_polish_ref(x, cost, quality, alpha, loads):
+    """Host-side oracle for ``repro.core.optimizer.primal_polish``."""
+    x = np.asarray(x).astype(np.int64).copy()
+    cost = np.asarray(cost, np.float32)
+    quality = np.asarray(quality, np.float32)
+    loads = np.asarray(loads, np.float32)
+    n, m = cost.shape
+    counts = np.bincount(x, minlength=m).astype(np.float32)
+    qsum = np.float32(quality[np.arange(n), x].sum())
+
+    # phase 0 — restore quality feasibility: best gain-per-dollar move first
+    for _ in range(4 * n):
+        if qsum >= np.float32(n) * np.float32(alpha) - 1e-9:
+            break
+        curq = quality[np.arange(n), x][:, None]
+        curc = cost[np.arange(n), x][:, None]
+        gain = quality - curq
+        extra = cost - curc
+        ok = (gain > 1e-12) & (counts[None, :] < loads[None, :])
+        if not ok.any():
+            break
+        score = np.where(ok, gain / np.maximum(extra, np.float32(1e-9)),
+                         np.float32(-np.inf))
+        i, j = np.unravel_index(np.argmax(score), score.shape)
+        qsum = np.float32(qsum + (quality[i, j] - quality[i, x[i]]))
+        counts[x[i]] -= 1.0
+        counts[j] += 1.0
+        x[i] = j
+
+    # phase 1 — steepest descent: apply the single largest feasible saving
+    for _ in range(8 * n):
+        curq = quality[np.arange(n), x][:, None]
+        curc = cost[np.arange(n), x][:, None]
+        slack = qsum - np.float32(n) * np.float32(alpha)
+        delta = cost - curc
+        dq = quality - curq
+        ok = (delta < -1e-12) & (counts[None, :] < loads[None, :]) & \
+            (dq >= -slack - 1e-12)
+        if not ok.any():
+            break
+        score = np.where(ok, delta, np.float32(np.inf))
+        i, j = np.unravel_index(np.argmin(score), score.shape)
+        qsum = np.float32(qsum + (quality[i, j] - quality[i, x[i]]))
+        counts[x[i]] -= 1.0
+        counts[j] += 1.0
+        x[i] = j
+    return x
+
+
+def budget_polish_ref(x, cost, quality, budget, loads):
+    """Host-side oracle for ``repro.core.optimizer.budget_polish``."""
+    x = np.asarray(x).astype(np.int64).copy()
+    cost = np.asarray(cost, np.float32)
+    quality = np.asarray(quality, np.float32)
+    loads = np.asarray(loads, np.float32)
+    n, m = cost.shape
+    counts = np.bincount(x, minlength=m).astype(np.float32)
+    csum = np.float32(cost[np.arange(n), x].sum())
+    # phase 0 — restore budget feasibility: least quality lost per $ saved
+    for _ in range(4 * n):
+        if csum <= np.float32(budget) + 1e-9:
+            break
+        curq = quality[np.arange(n), x][:, None]
+        curc = cost[np.arange(n), x][:, None]
+        dq = quality - curq
+        dc = cost - curc
+        ok = (dc < -1e-12) & (counts[None, :] < loads[None, :])
+        if not ok.any():
+            break
+        score = np.where(ok, dq / np.maximum(-dc, np.float32(1e-9)),
+                         np.float32(-np.inf))
+        i, j = np.unravel_index(np.argmax(score), score.shape)
+        csum = np.float32(csum + dc[i, j])
+        counts[x[i]] -= 1.0
+        counts[j] += 1.0
+        x[i] = j
+    # phase 1 — steepest quality ascent within the remaining budget
+    for _ in range(8 * n):
+        curq = quality[np.arange(n), x][:, None]
+        curc = cost[np.arange(n), x][:, None]
+        dq = quality - curq
+        dc = cost - curc
+        ok = (dq > 1e-12) & (counts[None, :] < loads[None, :]) & \
+            (csum + dc <= np.float32(budget) + 1e-9)
+        if not ok.any():
+            break
+        score = np.where(ok, dq, np.float32(-np.inf))
+        i, j = np.unravel_index(np.argmax(score), score.shape)
+        csum = np.float32(csum + dc[i, j])
+        counts[x[i]] -= 1.0
+        counts[j] += 1.0
+        x[i] = j
+    return x

@@ -138,7 +138,10 @@ class MultiLLMServer:
         loads = np.array([e.L for e in self.endpoints], float)
         counts = np.array([len(e.active) for e in self.endpoints], float)
         t0 = time.perf_counter()
-        x = self.policy.route(route_features(batch), loads, counts=counts)
+        # the same admission/routing path as the event-driven simulator:
+        # RouteBatch arrays in, assignment out (core.scheduler.route_via_batch)
+        from repro.core.scheduler import route_via_batch
+        x = route_via_batch(self.policy, route_features(batch), loads, counts)
         self.route_seconds += time.perf_counter() - t0
         self.route_calls += 1
         for req, j in zip(batch, x):

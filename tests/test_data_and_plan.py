@@ -1,7 +1,7 @@
 """Data substrate + layer-plan/config consistency."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or deterministic fallback
 
 from repro.configs import (LONG_500K_OK, cell_applicable, get_config,
                            get_smoke_config, list_archs)

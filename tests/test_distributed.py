@@ -7,6 +7,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow  # heavy 8-device subprocess compiles
+
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

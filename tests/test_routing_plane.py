@@ -1,0 +1,271 @@
+"""Unified routing plane (ISSUE 1): one DualSolver code path for both modes,
+exactly one fused-kernel launch per solve, device repair/polish parity with
+the NumPy oracles, in-flight hedging, and the RouteBatch contract."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DualSolver, RouteBatch, SolveInfo, brute_force,
+                        primal_polish, repair_workload, solve_assignment,
+                        solve_budget)
+from repro.core.optimizer import budget_polish
+
+
+def _rand_instance(seed, n=6, m=3):
+    rng = np.random.RandomState(seed)
+    c = rng.rand(n, m).astype(np.float32)
+    a = rng.rand(n, m).astype(np.float32)
+    return c, a
+
+
+# --- one code path, uniform info schema --------------------------------------
+
+def test_both_modes_share_schema():
+    c, a = _rand_instance(0, n=30, m=4)
+    loads = jnp.full((4,), 12.0)
+    _, iq = solve_assignment(c, a, 0.5, loads, iters=50)
+    _, ib = solve_budget(c, a, 10.0, loads, iters=50)
+    assert isinstance(iq, SolveInfo) and isinstance(ib, SolveInfo)
+    assert iq._fields == ib._fields
+    for info in (iq, ib):
+        assert info.lam_load.shape == (4,)
+        assert info.counts.shape == (4,)
+        assert float(info.counts.sum()) == 30.0
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_quality_mode_matches_brute_force(seed):
+    c, a = _rand_instance(seed)
+    n, m = c.shape
+    loads = np.full(m, 3.0)
+    alpha = 0.45
+    xb = brute_force(c, a, alpha, loads, mode="quality")
+    if xb is None:
+        return
+    x, info = solve_assignment(jnp.asarray(c), jnp.asarray(a), alpha,
+                               jnp.asarray(loads), iters=400)
+    x = repair_workload(x, c, a, loads, lam1=info.lam)
+    x = np.asarray(primal_polish(x, c, a, alpha, loads))
+    assert a[np.arange(n), x].mean() >= alpha - 1e-6
+    assert np.all(np.bincount(x, minlength=m) <= loads)
+    gap = c[np.arange(n), x].sum() - c[np.arange(n), xb].sum()
+    assert gap <= 0.20 * max(c[np.arange(n), xb].sum(), 1e-6) + 1e-6
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_budget_mode_matches_brute_force(seed):
+    c, a = _rand_instance(seed)
+    n, m = c.shape
+    loads = np.full(m, 3.0)
+    budget = 3.0
+    xb = brute_force(c, a, budget, loads, mode="budget")
+    if xb is None:
+        return
+    x, _ = DualSolver(mode="budget", iters=400, lr_constraint=50.0
+                      ).route_arrays(c, a, budget, loads)
+    x = np.asarray(x)
+    assert c[np.arange(n), x].sum() <= budget + 1e-5
+    assert np.all(np.bincount(x, minlength=m) <= loads)
+    gap = a[np.arange(n), xb].mean() - a[np.arange(n), x].mean()
+    assert gap <= 0.10 + 1e-6
+
+
+# --- fused Pallas solver: parity + single launch -----------------------------
+
+@pytest.mark.parametrize("n,bq", [(128, 64), (200, 64), (100, 32)])
+def test_fused_matches_reference_including_padding(n, bq):
+    """(200, 64) and (100, 32) exercise the padded-row strip in-kernel."""
+    from repro.kernels.lagrangian_assign.ops import solve_fused
+    key = jax.random.PRNGKey(n)
+    c = jax.random.uniform(key, (n, 6))
+    a = jax.random.uniform(jax.random.fold_in(key, 1), (n, 6))
+    loads = jnp.full((6,), n / 3.0)
+    x1, i1 = solve_fused(c, a, 0.6, loads, iters=60, bq=bq)
+    x2, i2 = solve_assignment(c, a, 0.6, loads, iters=60)
+    assert bool(jnp.all(x1 == x2))
+    assert abs(float(i1.cost) - float(i2.cost)) < 1e-3
+    assert abs(float(i1.quality) - float(i2.quality)) < 1e-4
+    assert np.allclose(np.asarray(i1.counts), np.asarray(i2.counts))
+
+
+def test_fused_budget_matches_reference():
+    from repro.kernels.lagrangian_assign.ops import solve_fused
+    key = jax.random.PRNGKey(7)
+    c = jax.random.uniform(key, (150, 5))
+    a = jax.random.uniform(jax.random.fold_in(key, 1), (150, 5))
+    loads = jnp.full((5,), 60.0)
+    x1, i1 = solve_fused(c, a, 25.0, loads, mode="budget", iters=60,
+                         lr_con=50.0, bq=64)
+    x2, i2 = solve_budget(c, a, 25.0, loads, iters=60)
+    assert bool(jnp.all(x1 == x2))
+    assert abs(float(i1.quality) - float(i2.quality)) < 1e-4
+
+
+def _count_pallas_calls(jaxpr, in_loop=False):
+    """(total pallas_call eqns, pallas_call eqns nested inside loops)."""
+    from jax._src.core import ClosedJaxpr, Jaxpr
+    total, looped = 0, 0
+    for eqn in jaxpr.eqns:
+        inner = in_loop or eqn.primitive.name in ("while", "scan")
+        if eqn.primitive.name == "pallas_call":
+            total += 1
+            looped += int(in_loop)
+        for v in eqn.params.values():
+            for sub in (v if isinstance(v, (list, tuple)) else [v]):
+                if isinstance(sub, ClosedJaxpr):
+                    sub = sub.jaxpr
+                if isinstance(sub, Jaxpr):
+                    t, l = _count_pallas_calls(sub, inner)
+                    total += t
+                    looped += l
+    return total, looped
+
+
+def test_fused_solver_is_one_kernel_launch():
+    """The fused path issues exactly ONE pallas_call per solve, and it is not
+    wrapped in any loop primitive (the seed launched one kernel per dual
+    iteration — 150 launches per solve)."""
+    from repro.kernels.lagrangian_assign.ops import solve_fused
+    c = jnp.ones((128, 4))
+    a = jnp.ones((128, 4))
+    loads = jnp.full((4,), 40.0)
+    jaxpr = jax.make_jaxpr(
+        lambda c, a, l: solve_fused(c, a, 0.6, l, iters=150))(c, a, loads)
+    total, looped = _count_pallas_calls(jaxpr.jaxpr)
+    assert total == 1
+    assert looped == 0
+
+
+# --- device repair/polish vs NumPy oracles -----------------------------------
+
+@pytest.mark.parametrize("seed", range(6))
+def test_repair_workload_matches_oracle(seed):
+    from repro.kernels.lagrangian_assign.ref import repair_workload_ref
+    rng = np.random.RandomState(seed)
+    n, m = 40, 5
+    c = rng.rand(n, m).astype(np.float32)
+    a = rng.rand(n, m).astype(np.float32)
+    loads = np.full(m, 9.0, np.float32)   # tight: 45 slots for 40 queries
+    x0 = rng.randint(0, m, n)
+    lam1 = float(rng.rand() * 2)
+    x_dev = np.asarray(repair_workload(x0, c, a, loads, lam1=lam1))
+    x_ref = repair_workload_ref(x0, c, a, loads, lam1=lam1)
+    assert np.array_equal(x_dev, x_ref)
+    assert np.all(np.bincount(x_dev, minlength=m) <= loads)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_polish_matches_oracle_both_modes(seed):
+    from repro.kernels.lagrangian_assign.ref import (budget_polish_ref,
+                                                     primal_polish_ref)
+    rng = np.random.RandomState(seed)
+    n, m = 40, 5
+    c = rng.rand(n, m).astype(np.float32)
+    a = rng.rand(n, m).astype(np.float32)
+    loads = np.full(m, 12.0, np.float32)
+    x0 = np.asarray(repair_workload(rng.randint(0, m, n), c, a, loads))
+    xq_dev = np.asarray(primal_polish(x0, c, a, 0.6, loads))
+    xq_ref = primal_polish_ref(x0, c, a, 0.6, loads)
+    assert np.array_equal(xq_dev, xq_ref)
+    xb_dev = np.asarray(budget_polish(x0, c, a, 25.0, loads))
+    xb_ref = budget_polish_ref(x0, c, a, 25.0, loads)
+    assert np.array_equal(xb_dev, xb_ref)
+    # polish never breaks workload feasibility
+    for x in (xq_dev, xb_dev):
+        assert np.all(np.bincount(x, minlength=m) <= loads)
+
+
+def test_route_pipeline_is_device_resident():
+    """route_arrays must lower to one jaxpr with no Python-level per-query
+    loop: tracing it once must succeed with abstract inputs (any Python loop
+    over N would either fail or unroll into an N-dependent jaxpr)."""
+    solver = DualSolver(iters=20)
+    c = jnp.ones((64, 4))
+    a = jnp.ones((64, 4))
+    loads = jnp.full((4,), 20.0)
+    jaxpr = jax.make_jaxpr(
+        lambda c, a, l: solver.route_arrays(c, a, 0.6, l)[0])(c, a, loads)
+    # while_loops are fine (device-resident); their count must not scale w/ N
+    n_eqns = len(jaxpr.jaxpr.eqns)
+    jaxpr_big = jax.make_jaxpr(
+        lambda c, a, l: solver.route_arrays(c, a, 0.6, l)[0])(
+        jnp.ones((512, 4)), jnp.ones((512, 4)), loads)
+    assert len(jaxpr_big.jaxpr.eqns) == n_eqns
+
+
+def test_budget_polish_restores_feasibility():
+    """Phase 0: an over-budget assignment is driven down to the budget
+    (losing the least quality per dollar) whenever that is possible."""
+    from repro.kernels.lagrangian_assign.ref import budget_polish_ref
+    rng = np.random.RandomState(2)
+    n, m = 30, 4
+    c = rng.rand(n, m).astype(np.float32) + 0.1
+    a = rng.rand(n, m).astype(np.float32)
+    loads = np.full(m, float(n), np.float32)
+    x0 = c.argmax(axis=1).astype(np.int64)          # most expensive start
+    budget = float(1.2 * c.min(axis=1).sum())       # feasible but tight
+    x = np.asarray(budget_polish(x0, c, a, budget, loads))
+    assert c[np.arange(n), x].sum() <= budget + 1e-5
+    assert np.array_equal(x, budget_polish_ref(x0, c, a, budget, loads))
+
+
+# --- vmapped threshold grids -------------------------------------------------
+
+def test_solve_grid_sweeps_thresholds_in_one_call():
+    c, a = _rand_instance(3, n=80, m=5)
+    loads = np.full(5, 40.0)
+    alphas = np.array([0.3, 0.5, 0.7], np.float32)
+    xs, infos = DualSolver(iters=200).solve_grid(c, a, alphas, loads)
+    assert xs.shape == (3, 80)
+    quals = [a[np.arange(80), np.asarray(x)].mean() for x in xs]
+    assert quals[0] <= quals[1] + 1e-6 <= quals[2] + 2e-6
+
+
+# --- RouteBatch contract -----------------------------------------------------
+
+def test_route_batch_producer_and_policies(qaserve_splits):
+    from repro.core import BalanceAware, Oracle, RandomPolicy
+    _, _, test = qaserve_splits
+    loads = np.full(test.m, 7.0)
+    counts = np.full(test.m, 2.0)
+    rb = test.route_batch(loads, counts)
+    assert isinstance(rb, RouteBatch)
+    assert rb.n == test.n and rb.m == test.m
+    assert np.allclose(rb.available, loads - counts)
+    assert rb.cost_true.shape == (test.n, test.m)
+    for pol in (BalanceAware(), RandomPolicy(), Oracle()):
+        x = pol.route(rb, rng=np.random.RandomState(0))
+        assert x.shape == (test.n,)
+        assert x.min() >= 0 and x.max() < test.m
+
+
+def test_oracle_requires_ground_truth(qaserve_splits):
+    from repro.core import Oracle
+    _, _, test = qaserve_splits
+    rb = test.route_batch(np.full(test.m, 4.0), with_truth=False)
+    assert rb.cost_true is None and rb.correct_true is None
+    with pytest.raises(ValueError):
+        Oracle().route(rb)
+
+
+# --- scheduler hedging -------------------------------------------------------
+
+def test_hedge_fires_while_straggler_in_flight():
+    """A job that is slow on one endpoint must be duplicated *before* it
+    completes, so the duplicate can win (the seed hedged after the pop, when
+    the job had already finished — pure wasted cost)."""
+    from repro.core import BalanceAware, SchedulerConfig, run_serving
+    from repro.data.qaserve import generate
+    ds = generate(n=24, seed=0)
+    # model 0 is pathologically slow; everything else is fast
+    ds.out_len[:, 0] = 1024
+    ds.out_len[:, 1:] = 40
+    base = run_serving(ds, BalanceAware(), SchedulerConfig(loads=2, seed=3))
+    hedged = run_serving(ds, BalanceAware(),
+                         SchedulerConfig(loads=2, seed=3, hedge=True,
+                                         hedge_factor=3.0))
+    assert hedged.hedged >= 1
+    # duplicates finish first and the straggler copy is cancelled
+    assert hedged.makespan < base.makespan
+    assert hedged.per_model_counts.sum() == ds.n

@@ -2,6 +2,8 @@
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # full serving simulations; skipped in fast CI
+
 from repro.core import (BalanceAware, OmniRouter, RetrievalPredictor,
                         RouterConfig, SchedulerConfig, run_serving)
 
