@@ -27,13 +27,18 @@ def run():
         decode_attention(qd, kc, vc, 1500)), repeats=2)
     emit("kernel_decode_attention_2k", us, "B2_T2048_H8_K2_D64")
 
-    from repro.kernels.topk_retrieval.ops import topk_retrieval
+    from repro.kernels.topk_retrieval.ops import retrieval_vote, topk_retrieval
     st = jax.random.normal(key, (4096, 128))
     st = st / jnp.linalg.norm(st, axis=1, keepdims=True)
     qq = jax.random.normal(key, (64, 128))
     _, us = timed(lambda: jax.block_until_ready(
-        topk_retrieval(st, qq, 8)[0]), repeats=2)
+        topk_retrieval(st, qq, 8, use_kernel=True)[0]), repeats=2)
     emit("kernel_topk_retrieval_4k", us, "DB4096_d128_B64_k8")
+
+    lab = jax.random.uniform(key, (4096, 12))
+    _, us = timed(lambda: jax.block_until_ready(
+        retrieval_vote(st, lab, qq, 8, use_kernel=True)[2]), repeats=2)
+    emit("kernel_retrieval_vote_4k", us, "DB4096_d128_B64_k8_L12")
 
     from repro.kernels.lagrangian_assign.ops import solve_assignment_kernel
     c = jax.random.uniform(key, (512, 6))

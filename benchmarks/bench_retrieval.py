@@ -1,0 +1,87 @@
+"""Prediction-plane perf trajectory: fused device-resident retrieval vote vs
+the seed's unfused cosine_topk + host NumPy vote.
+
+Writes ``BENCH_retrieval.json`` at the repo root (retrieve+vote wall-clock
+at N_db ∈ {1k, 16k, 128k}) so the fused path's advantage — neighbour
+indices never round-trip to the host and the per-model labels come back
+ready for the solver — is recorded over time.
+
+  PYTHONPATH=src python -m benchmarks.run --only retrieval
+
+Smoke mode (CI fast subset): ``RETRIEVAL_BENCH_SMOKE=1`` shrinks the size
+grid and repeat count so the snapshot stays within the fast-CI budget.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit, timed_interleaved
+
+SMOKE = bool(int(os.environ.get("RETRIEVAL_BENCH_SMOKE", "0")))
+SIZES = (1024, 16384) if SMOKE else (1024, 16384, 131072)
+REPEATS = 5 if SMOKE else 15
+B = 512            # queries per routed batch
+D = 64             # embedding dim
+M = 6              # pool models
+K = 32             # neighbours (paper Table 4 upper range)
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_retrieval.json")
+
+
+def run():
+    from repro.core.retrieval import cosine_topk
+    from repro.kernels.topk_retrieval.ops import retrieval_vote
+
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for n_db in SIZES:
+        store = jax.random.normal(key, (n_db, D))
+        store = store / jnp.linalg.norm(store, axis=1, keepdims=True)
+        labels = jax.random.uniform(jax.random.fold_in(key, 1), (n_db, 2 * M))
+        labels_np = np.asarray(labels)
+        correct_np, outlen_np = labels_np[:, :M], labels_np[:, M:]
+        q = jax.random.normal(jax.random.fold_in(key, 2), (B, D))
+        q = q / jnp.linalg.norm(q, axis=1, keepdims=True)
+        jax.block_until_ready((store, labels, q))
+
+        def fused():
+            # one jit: sim -> top-k -> gather-labels -> vote, votes stay on
+            # device where the solver consumes them
+            _, _, votes = retrieval_vote(store, labels, q, K)
+            return jax.block_until_ready(votes)
+
+        def unfused():
+            # the seed path: device top-k, then neighbour indices cross to
+            # the host, NumPy votes, and the result is shipped back for the
+            # solver
+            _, idx = cosine_topk(store, q, K)
+            idx = np.asarray(idx)
+            cap = correct_np[idx].mean(axis=1)
+            exp_len = outlen_np[idx].mean(axis=1)
+            return jax.block_until_ready(
+                (jnp.asarray(cap), jnp.asarray(exp_len)))
+
+        us = timed_interleaved({"fused": fused, "unfused": unfused},
+                               repeats=REPEATS)
+        emit(f"retrieval_n{n_db}_fused_vote", us["fused"],
+             f"one_jit_B{B}_k{K}")
+        emit(f"retrieval_n{n_db}_unfused_host_vote", us["unfused"],
+             "cosine_topk+numpy_vote")
+        rows.append({
+            "n_db": n_db, "b": B, "d": D, "k": K, "m": M,
+            "fused_us": us["fused"],
+            "unfused_us": us["unfused"],
+            "fused_vs_unfused_speedup": us["unfused"] / max(us["fused"], 1e-9),
+        })
+
+    payload = {"backend": jax.default_backend(), "smoke": SMOKE,
+               "sizes": rows}
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    emit("retrieval_json", 0.0, OUT_PATH)

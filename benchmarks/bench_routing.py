@@ -16,7 +16,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .common import emit
+from .common import emit, timed_interleaved
 
 SIZES = (256, 2048, 16384)
 M = 6
@@ -60,26 +60,6 @@ def _seed_per_iteration_launch(cost, quality, alpha, loads, *, iters):
     return x, info
 
 
-def _timed_interleaved(fns: dict, repeats: int) -> dict:
-    """Min-of-interleaved-runs (µs): the min over many alternating runs
-    estimates uncontended runtime, robust to drift and scheduling noise on
-    shared machines (unlike timing each candidate in its own burst)."""
-    import time
-
-    import numpy as np
-    for f in fns.values():
-        f()  # warmup / compile
-    samples = {k: [] for k in fns}
-    keys = list(fns)
-    for rep in range(repeats):
-        for i in range(len(keys)):          # rotate order across reps
-            k = keys[(rep + i) % len(keys)]
-            t0 = time.perf_counter()
-            fns[k]()
-            samples[k].append((time.perf_counter() - t0) * 1e6)
-    return {k: float(np.min(v)) for k, v in samples.items()}
-
-
 def run():
     from repro.core.optimizer import solve_assignment
     from repro.kernels.lagrangian_assign.ops import solve_fused
@@ -92,7 +72,7 @@ def run():
         loads = jnp.full((M,), n / 2.0)
         bq = min(n, 2048)
 
-        us = _timed_interleaved({
+        us = timed_interleaved({
             "ref": lambda: jax.block_until_ready(
                 solve_assignment(c, a, 0.7, loads, iters=ITERS)[0]),
             "fused": lambda: jax.block_until_ready(

@@ -56,6 +56,23 @@ def po_policy():
     return PerceptionOnly().prepare(train)
 
 
+def timed_interleaved(fns: dict, repeats: int) -> dict:
+    """Min-of-interleaved-runs (µs): the min over many alternating runs
+    estimates uncontended runtime, robust to drift and scheduling noise on
+    shared machines (unlike timing each candidate in its own burst)."""
+    for f in fns.values():
+        f()  # warmup / compile
+    samples = {k: [] for k in fns}
+    keys = list(fns)
+    for rep in range(repeats):
+        for i in range(len(keys)):          # rotate order across reps
+            k = keys[(rep + i) % len(keys)]
+            t0 = time.perf_counter()
+            fns[k]()
+            samples[k].append((time.perf_counter() - t0) * 1e6)
+    return {k: float(np.min(v)) for k, v in samples.items()}
+
+
 def timed(fn, *args, repeats: int = 3, **kw):
     fn(*args, **kw)  # warmup / compile
     t0 = time.perf_counter()

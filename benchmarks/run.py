@@ -24,6 +24,7 @@ MODULES = [
     ("table6", "benchmarks.bench_same_series"),
     ("kernels", "benchmarks.bench_kernels"),
     ("routing", "benchmarks.bench_routing"),   # writes BENCH_routing.json
+    ("retrieval", "benchmarks.bench_retrieval"),  # writes BENCH_retrieval.json
     ("roofline", "benchmarks.bench_roofline"),
 ]
 

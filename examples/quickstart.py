@@ -34,3 +34,11 @@ budget_router = OmniRouter(predictor, RouterConfig(budget=0.02))
 xb = budget_router.route(batch)
 m = evaluate_assignment(test, xb)
 print(f"budget: SR={m['success_rate']:.3f} cost=${m['cost']:.4f} (B=$0.02)")
+
+# 6. the paper's full hybrid predictor (ECCOS-H): trained heads + retrieval
+# vote, blended by neighbour confidence — same route() call, still one jit
+from repro.core import HybridPredictor, PredictorConfig
+
+hybrid = HybridPredictor(PredictorConfig(n_models=ds.m)).fit(train, steps=150)
+xh = OmniRouter(hybrid, RouterConfig(alpha=0.75), name="ECCOS-H").route(batch)
+print("ECCOS-H:", evaluate_assignment(test, xh))

@@ -1,12 +1,15 @@
-# ECCOS/OmniRouter core: multi-objective predictors (trained + retrieval),
-# unified Lagrangian-dual solver, serving scheduler, baselines.
+# ECCOS/OmniRouter core: the prediction plane (trained + retrieval + hybrid
+# predictors over one device contract), unified Lagrangian-dual solver,
+# serving scheduler, baselines.
 from .baselines import (BalanceAware, Oracle, PerceptionOnly, Policy,  # noqa: F401
                         RandomPolicy, RouteBatch, S3Cost)
+from .features import featurize, featurize_tokens, projection  # noqa: F401
+from .hybrid import HybridConfig, HybridPredictor  # noqa: F401
 from .optimizer import (DualSolver, SolveInfo, brute_force,  # noqa: F401
                         primal_polish, repair_workload, solve_assignment,
                         solve_budget)
 from .predictor import PredictorConfig, TrainedPredictor  # noqa: F401
-from .retrieval import RetrievalPredictor  # noqa: F401
+from .retrieval import RetrievalPredictor, VectorStore  # noqa: F401
 from .router import OmniRouter, RouterConfig, evaluate_assignment  # noqa: F401
 from .scheduler import (SchedulerConfig, ServeResult, route_via_batch,  # noqa: F401
                         run_serving)

@@ -1,0 +1,78 @@
+"""Query featurization for the prediction plane (frozen-embedding role).
+
+Hashed bag-of-words → fixed Gaussian random projection → L2 normalize.  Two
+equivalent implementations:
+
+- ``featurize_tokens`` — device path: the projection rows of each token id
+  are gathered and mask-summed (the segment-sum form of ``bow @ proj``), so
+  the (N, VOCAB) dense bag-of-words matrix is never materialized and the
+  whole embed step lives inside the caller's jit.
+- ``featurize`` — host oracle (NumPy), vectorized ``np.add.at`` over the
+  token grid.  The seed looped over every token in Python *and* regenerated
+  the (VOCAB, d) projection on every call; both are gone.
+
+The projection is deterministic per ``(d, seed)`` and cached (host + device
+copies) — callers on either path see the same frozen embedding model.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import tokenizer
+
+FEAT_LEN = 64          # featurizer token window (seed behaviour preserved)
+
+_PROJ_NP: Dict[Tuple[int, int], np.ndarray] = {}
+_PROJ_JNP: Dict[Tuple[int, int], jax.Array] = {}
+
+
+def projection_np(d: int = 256, seed: int = 7) -> np.ndarray:
+    """(VOCAB, d) Gaussian projection, generated once per (d, seed)."""
+    key = (d, seed)
+    if key not in _PROJ_NP:
+        _PROJ_NP[key] = np.random.RandomState(seed).randn(
+            tokenizer.VOCAB, d).astype(np.float32) / np.sqrt(d)
+    return _PROJ_NP[key]
+
+
+def projection(d: int = 256, seed: int = 7) -> jax.Array:
+    """Device-resident copy of the cached projection."""
+    key = (d, seed)
+    if key not in _PROJ_JNP:
+        _PROJ_JNP[key] = jnp.asarray(projection_np(d, seed))
+    return _PROJ_JNP[key]
+
+
+def featurize_tokens(tokens: jax.Array, proj: jax.Array) -> jax.Array:
+    """tokens (N, T) int32, proj (VOCAB, d) -> L2-normalized (N, d).
+
+    Pure-jax (traceable): BoW-projection via per-token gather + masked sum —
+    equivalent to ``bow @ proj`` without the (N, VOCAB) intermediate.
+    """
+    mask = (tokens > tokenizer.CLS).astype(proj.dtype)       # drop PAD/CLS
+    emb = jnp.einsum("ntd,nt->nd", proj[tokens], mask)
+    norm = jnp.linalg.norm(emb, axis=1, keepdims=True)
+    return emb / jnp.maximum(norm, 1e-6)
+
+
+def predicted_cost(input_len, exp_len, price_in, price_out):
+    """(N,) input lengths + (N, M) expected output lengths -> (N, M) $ cost
+    under per-1k-token pricing — the ONE pricing rule every predictor's
+    device path shares (ground-truth twin: ``QAServe.cost_matrix``)."""
+    return (input_len[:, None] * price_in[None, :]
+            + exp_len * price_out[None, :]) / 1000.0
+
+
+def featurize(texts, d: int = 256, seed: int = 7) -> np.ndarray:
+    """Host oracle: same embedding from raw text, loop-free NumPy."""
+    toks = tokenizer.encode_batch(texts, max_len=FEAT_LEN)
+    n, t = toks.shape
+    bow = np.zeros((n, tokenizer.VOCAB), np.float32)
+    w = (toks > tokenizer.CLS).astype(np.float32)
+    np.add.at(bow, (np.repeat(np.arange(n), t), toks.ravel()), w.ravel())
+    emb = bow @ projection_np(d, seed)
+    return emb / np.maximum(np.linalg.norm(emb, axis=1, keepdims=True), 1e-6)

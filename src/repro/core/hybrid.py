@@ -1,0 +1,139 @@
+"""ECCOS-H: the paper's hybrid retrieval-augmented predictor (§3.1).
+
+The paper's predictor is *hybrid*: a trained dual-head encoder (ECCOS-T,
+Eqs. 3-4) generalizes to novel queries, while the retrieval vote (ECCOS-R,
+Eq. 5) is near-exact whenever close historical neighbours exist (it returns
+the neighbour's own record on a duplicate).  ECCOS-H combines them with a
+retrieval-confidence gate:
+
+    s̄_i  = mean cosine similarity of query i's valid top-k neighbours
+    w_i  = sigmoid((s̄_i − tau) / temp)                     (blend weight)
+    cap_i  = w_i · cap^R_i  + (1 − w_i) · cap^T_i          (capability)
+    len_i  = w_i · len^R_i  + (1 − w_i) · len^T_i          (expected length)
+
+so densely-covered regions of query space trust the neighbour means and
+sparse regions fall back to the trained posteriors — the confidence-weighted
+blend of the paper's two §3.1 information sources.  ``tau`` is the
+similarity at which both are trusted equally; ``temp`` sets how sharp the
+hand-off is (tau=1, temp→0 degenerates to pure ECCOS-T; tau→-∞ to pure
+ECCOS-R).
+
+The whole predict is ONE pure-jax function (``hybrid_predict_device``):
+encoder heads, hashed-BoW featurization, fused retrieval vote, blend, and
+cost matrix all trace into a single jit — ``OmniRouter`` composes it with
+the dual solver so featurize → retrieve → vote → solve runs without a host
+round-trip.  ``observe`` folds completed requests into the vector store
+online (the trained heads stay frozen between refits, mirroring the paper's
+offline-trained / online-retrieved split).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import tokenizer
+from repro.data.qaserve import QAServe
+
+from .features import FEAT_LEN, predicted_cost, projection
+from .predictor import (PredictorConfig, TrainedPredictor,
+                        trained_predict_device)
+from .retrieval import RetrievalPredictor, retrieval_predict_device
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    d_retrieval: int = 256
+    k: int = 8
+    feat_seed: int = 7
+    tau: float = 0.55            # similarity of equal trust
+    temp: float = 0.08           # hand-off sharpness
+    use_kernel: Optional[bool] = None   # None -> Pallas on TPU
+
+
+@partial(jax.jit, static_argnames=("pcfg", "k", "use_kernel", "tau", "temp"))
+def hybrid_predict_device(params, store_emb, store_labels, n_valid, proj,
+                          tokens, input_len, price_in, price_out, *,
+                          pcfg: PredictorConfig, k: int,
+                          use_kernel: Optional[bool], tau: float,
+                          temp: float):
+    """Pure-jax ECCOS-H predict: tokens -> (cap, exp_len, cost, w)."""
+    cap_t, len_t, _ = trained_predict_device(
+        pcfg, params, tokens, input_len, price_in, price_out)
+    cap_r, len_r, _, conf = retrieval_predict_device(
+        store_emb, store_labels, n_valid, proj, tokens[:, :FEAT_LEN],
+        input_len, price_in, price_out, k=k, use_kernel=use_kernel)
+    w = jax.nn.sigmoid((conf - tau) / temp)[:, None]         # (B, 1)
+    cap = w * cap_r + (1.0 - w) * cap_t
+    exp_len = w * len_r + (1.0 - w) * len_t
+    cost = predicted_cost(input_len, exp_len, price_in, price_out)
+    return cap, exp_len, cost, w[:, 0]
+
+
+class HybridPredictor:
+    """ECCOS-H = trained heads + vector-store vote behind one contract."""
+
+    def __init__(self, pcfg: Optional[PredictorConfig] = None,
+                 hcfg: HybridConfig = HybridConfig()):
+        self.hcfg = hcfg
+        self.trained = TrainedPredictor(pcfg or PredictorConfig())
+        self.retrieval = RetrievalPredictor(
+            d=hcfg.d_retrieval, k=hcfg.k, use_kernel=hcfg.use_kernel,
+            seed=hcfg.feat_seed)
+
+    def fit(self, ds: QAServe, *, steps: int = 300, batch: int = 64,
+            seed: int = 0):
+        self.trained.fit(ds, steps=steps, batch=batch, seed=seed)
+        self.retrieval.fit(ds)
+        return self
+
+    def observe(self, texts, correct, out_len) -> "HybridPredictor":
+        """Online store growth; the trained heads stay frozen."""
+        self.retrieval.observe(texts, correct, out_len)
+        return self
+
+    # --- the device predict contract ---------------------------------------
+    @property
+    def token_len(self) -> int:
+        return max(self.trained.cfg.max_len, FEAT_LEN)
+
+    def device_inputs(self):
+        vs = self.retrieval.vstore
+        return (self.trained.params, vs.emb, vs.labels, vs.n_valid,
+                projection(self.hcfg.d_retrieval, self.hcfg.feat_seed))
+
+    def predict_device(self, inputs, tokens, input_len, price_in, price_out):
+        """Pure-jax (traceable) — composes under one outer jit with the
+        solver; see ``OmniRouter``."""
+        params, emb, labels, n_valid, proj = inputs
+        cap, exp_len, cost, _ = hybrid_predict_device(
+            params, emb, labels, n_valid, proj, tokens, input_len, price_in,
+            price_out, pcfg=self.trained.cfg, k=self.hcfg.k,
+            use_kernel=self.hcfg.use_kernel, tau=self.hcfg.tau,
+            temp=self.hcfg.temp)
+        return cap, exp_len, cost
+
+    def predict_arrays(self, ds):
+        """Returns (capability (N,M), expected_out_len (N,M), cost (N,M)) —
+        the same schema as ECCOS-T / ECCOS-R ``predict_arrays``."""
+        toks = jnp.asarray(tokenizer.encode_batch(ds.queries, self.token_len))
+        cap, exp_len, cost = self.predict_device(
+            self.device_inputs(), toks, jnp.asarray(ds.input_len, jnp.float32),
+            jnp.asarray(ds.price_in, jnp.float32),
+            jnp.asarray(ds.price_out, jnp.float32))
+        return np.asarray(cap), np.asarray(exp_len), np.asarray(cost)
+
+    def eval_accuracy(self, ds: QAServe) -> Dict[str, float]:
+        from repro.data.qaserve import bucketize
+        cap, exp_len, _ = self.predict_arrays(ds)
+        n_buckets = self.trained.cfg.n_buckets
+        cap_acc = float(((cap > 0.5) == (ds.correct > 0)).mean())
+        pred_b = bucketize(exp_len, n_buckets)
+        true_b = bucketize(ds.out_len, n_buckets)
+        return {"capability_acc": cap_acc,
+                "bucket_exact": float((pred_b == true_b).mean()),
+                "bucket_within1": float((np.abs(pred_b - true_b) <= 1).mean())}

@@ -12,6 +12,7 @@ Trained with BCE (capability) + CE (length buckets) on (Synth)QAServe.
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Dict, Tuple
 
 import jax
@@ -20,7 +21,7 @@ import numpy as np
 
 from repro.common import ParamDecl, init_params, logical_shard
 from repro.data import tokenizer
-from repro.data.qaserve import QAServe, bucketize, bucket_expectation, L_MAX
+from repro.data.qaserve import QAServe, bucketize, L_MAX
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,6 +114,24 @@ def predict(cfg: PredictorConfig, params: dict, tokens: jax.Array):
     return cap, jax.nn.softmax(len_logits, axis=-1)
 
 
+def trained_predict_device(cfg: PredictorConfig, params: dict, tokens,
+                           input_len, price_in, price_out):
+    """Pure-jax ECCOS-T predict: tokens -> (cap, exp_len, cost).
+
+    The length-bucket expectation (midpoint rule) and the cost matrix are
+    computed on device so the whole predict step composes under one outer
+    jit with the retrieval vote and the solver (no host round-trip).
+    """
+    from .features import predicted_cost
+
+    cap, len_probs = predict(cfg, params, tokens[:, :cfg.max_len])
+    width = L_MAX / cfg.n_buckets
+    mids = (jnp.arange(cfg.n_buckets, dtype=jnp.float32) + 0.5) * width
+    exp_len = len_probs @ mids                           # (B, M)
+    return cap, exp_len, predicted_cost(input_len, exp_len, price_in,
+                                        price_out)
+
+
 def loss_fn(cfg: PredictorConfig, params: dict, batch: Dict[str, jax.Array]):
     q = encode_queries(cfg, params, batch["tokens"])
     inter = q[:, None, :] * params["model_embed"][None]
@@ -133,6 +152,7 @@ class TrainedPredictor:
     def __init__(self, cfg: PredictorConfig):
         self.cfg = cfg
         self.params = None
+        self._predict_jit = None
 
     def fit(self, ds: QAServe, *, steps: int = 300, batch: int = 64,
             seed: int = 0, log_every: int = 0):
@@ -170,21 +190,35 @@ class TrainedPredictor:
         self.params = params
         return losses
 
+    # --- the device predict contract (shared with Retrieval/Hybrid) -------
+    @property
+    def token_len(self) -> int:
+        return self.cfg.max_len
+
+    def device_inputs(self):
+        return (self.params,)
+
+    def predict_device(self, inputs, tokens, input_len, price_in, price_out):
+        """Pure-jax (traceable) — composes under one outer jit with the
+        solver; see ``OmniRouter``."""
+        return trained_predict_device(self.cfg, inputs[0], tokens, input_len,
+                                      price_in, price_out)
+
     def predict_arrays(self, ds):
         """Returns (capability (N,M), expected_out_len (N,M), cost (N,M)).
 
         ``ds`` is anything exposing the RouteBatch feature surface
         (queries, input_len, price_in, price_out): a QAServe or a RouteBatch.
         """
+        if self._predict_jit is None:
+            self._predict_jit = jax.jit(partial(trained_predict_device,
+                                                self.cfg))
         toks = jnp.asarray(tokenizer.encode_batch(ds.queries, self.cfg.max_len))
-        cap, len_probs = jax.jit(lambda t: predict(self.cfg, self.params, t))(toks)
-        cap = np.asarray(cap)
-        n, m = cap.shape
-        exp_len = bucket_expectation(np.asarray(len_probs).reshape(
-            n * m, -1), self.cfg.n_buckets).reshape(n, m)
-        cost = (np.asarray(ds.input_len)[:, None] * ds.price_in
-                + exp_len * ds.price_out) / 1000.0
-        return cap, exp_len, cost
+        cap, exp_len, cost = self._predict_jit(
+            self.params, toks, jnp.asarray(ds.input_len, jnp.float32),
+            jnp.asarray(ds.price_in, jnp.float32),
+            jnp.asarray(ds.price_out, jnp.float32))
+        return np.asarray(cap), np.asarray(exp_len), np.asarray(cost)
 
     def eval_accuracy(self, ds: QAServe) -> Dict[str, float]:
         cap, exp_len, _ = self.predict_arrays(ds)

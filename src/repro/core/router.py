@@ -1,8 +1,18 @@
 """OmniRouter facade: two-stage routing (predict → constrained optimize).
 
-``route`` consumes the array-based :class:`RouteBatch` contract and runs the
-whole optimize→repair→polish pipeline on device (jit-compiled; no per-query
-Python loops) via :class:`repro.core.optimizer.DualSolver`.
+``route`` consumes the array-based :class:`RouteBatch` contract.  When the
+predictor implements the device predict contract (``token_len`` /
+``device_inputs`` / ``predict_device`` — ECCOS-T, ECCOS-R and ECCOS-H all
+do), the ONLY host work is tokenizing the query text: featurize → retrieve
+→ vote → blend → solve → repair → polish trace into a single jit-compiled
+function, so no intermediate (capability/cost matrices, neighbour indices)
+ever round-trips to the host between the predictor and the solver.
+Predictor state (encoder params, vector-store buffers, valid-row count) is
+passed as arguments, so online store appends are picked up without
+retracing (the store's capacity-doubling is the only recompile trigger).
+
+Predictors without the device contract fall back to the two-call path
+(``predict_arrays`` then ``DualSolver.route_arrays``).
 """
 from __future__ import annotations
 
@@ -10,10 +20,12 @@ import dataclasses
 import time
 from typing import Dict, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.data.qaserve import QAServe
+from repro.data import tokenizer
 from .baselines import Policy, RouteBatch
 from .optimizer import DualSolver
 
@@ -35,7 +47,8 @@ class RouterConfig:
 
 
 class OmniRouter(Policy):
-    """ECCOS with a pluggable predictor ('T' trained / 'R' retrieval)."""
+    """ECCOS with a pluggable predictor ('T' trained / 'R' retrieval /
+    'H' hybrid)."""
 
     def __init__(self, predictor, cfg: RouterConfig = RouterConfig(),
                  name: str = "ECCOS"):
@@ -49,24 +62,76 @@ class OmniRouter(Policy):
             lr_workload=cfg.lr_workload, use_kernel=cfg.use_assign_kernel)
         self.route_seconds = 0.0    # scheduling-overhead accounting (Fig. 3)
         self.predict_seconds = 0.0
+        self._fused_route = None    # jitted predict→solve, built lazily
 
     def prepare(self, train_ds: QAServe):
         return self
 
+    def observe(self, texts, correct, out_len):
+        """Fold completed requests into the predictor's store (if it keeps
+        one) — the scheduler / serving engine call this online.  Returns the
+        absorbing predictor, or None when the predictor keeps no store (so
+        fold accounting doesn't report folds that never happened)."""
+        obs = getattr(self.predictor, "observe", None)
+        return None if obs is None else obs(texts, correct, out_len)
+
+    def _thresholds(self):
+        """(solver threshold, polish threshold) — the polish value is only
+        consulted in quality mode; budget mode polishes to the budget."""
+        if self.cfg.budget is not None:
+            return self.cfg.budget, self.cfg.budget
+        return (self.cfg.alpha,
+                min(self.cfg.alpha + self.cfg.alpha_margin, 1.0))
+
+    def _build_fused(self):
+        predictor, solver = self.predictor, self.solver
+
+        def fused(inputs, tokens, input_len, price_in, price_out, avail,
+                  threshold, polish_threshold):
+            cap, _, cost = predictor.predict_device(
+                inputs, tokens, input_len, price_in, price_out)
+            return solver.route_arrays(cost, cap, threshold, avail,
+                                       polish_threshold=polish_threshold)
+
+        return jax.jit(fused)
+
     def route(self, batch: RouteBatch, rng=None) -> np.ndarray:
+        if hasattr(self.predictor, "predict_device"):
+            return self._route_device(batch)
+        return self._route_hostpredict(batch)
+
+    def _route_device(self, batch: RouteBatch) -> np.ndarray:
+        """Single-jit path: tokenize on host, everything else on device."""
+        t0 = time.perf_counter()
+        toks = jnp.asarray(tokenizer.encode_batch(
+            batch.queries, self.predictor.token_len))
+        t1 = time.perf_counter()
+        self.predict_seconds += t1 - t0
+        if self._fused_route is None:
+            self._fused_route = self._build_fused()
+        threshold, polish_threshold = self._thresholds()
+        x, _ = self._fused_route(
+            self.predictor.device_inputs(), toks,
+            jnp.asarray(batch.input_len, jnp.float32),
+            jnp.asarray(batch.price_in, jnp.float32),
+            jnp.asarray(batch.price_out, jnp.float32),
+            jnp.asarray(batch.available, jnp.float32),
+            jnp.asarray(threshold, jnp.float32),
+            jnp.asarray(polish_threshold, jnp.float32))
+        x = np.asarray(x)
+        self.route_seconds += time.perf_counter() - t1
+        return x
+
+    def _route_hostpredict(self, batch: RouteBatch) -> np.ndarray:
+        """Legacy two-call path for predictors without the device contract."""
         t0 = time.perf_counter()
         cap, _, cost = self.predictor.predict_arrays(batch)
         t1 = time.perf_counter()
         self.predict_seconds += t1 - t0
-        avail = batch.available
-        if self.cfg.budget is not None:
-            threshold, polish_threshold = self.cfg.budget, None
-        else:
-            threshold = self.cfg.alpha
-            polish_threshold = min(self.cfg.alpha + self.cfg.alpha_margin, 1.0)
+        threshold, polish_threshold = self._thresholds()
         x, _ = self.solver.route_arrays(
             jnp.asarray(cost), jnp.asarray(cap), threshold,
-            jnp.asarray(avail), polish_threshold=polish_threshold)
+            jnp.asarray(batch.available), polish_threshold=polish_threshold)
         x = np.asarray(x)
         self.route_seconds += time.perf_counter() - t1
         return x

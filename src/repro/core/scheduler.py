@@ -37,6 +37,8 @@ class SchedulerConfig:
     tokens_per_sec: float = 60.0    # endpoint decode speed
     hedge: bool = False             # straggler mitigation: duplicate dispatch
     hedge_factor: float = 3.0       # hedge when remaining > factor x median
+    fold_online: bool = False       # fold completions into the policy's store
+    fold_chunk: int = 64            # completions per observe() flush
     seed: int = 0
 
 
@@ -66,6 +68,24 @@ def route_via_batch(policy: Policy, ds_like, loads, counts, rng=None
     return np.asarray(policy.route(batch, rng=rng)).astype(int)
 
 
+def fold_completions(policy: Policy, ds_like, idxs) -> bool:
+    """Fold completed requests back into the policy's predictor store
+    (``policy.observe``) — the online half of the prediction plane.  Returns
+    True when something was actually folded: truth exists AND observe found
+    a store to absorb it (observe returns the absorber, or None — e.g. an
+    OmniRouter over a store-less TrainedPredictor)."""
+    obs = getattr(policy, "observe", None)
+    if obs is None or len(idxs) == 0:
+        return False
+    correct = getattr(ds_like, "correct", None)
+    out_len = getattr(ds_like, "out_len", None)
+    if correct is None or out_len is None:
+        return False            # a live engine without labels: nothing to fold
+    idxs = np.asarray(idxs, int)
+    return obs([ds_like.queries[i] for i in idxs], np.asarray(correct)[idxs],
+               np.asarray(out_len)[idxs]) is not None
+
+
 def run_serving(ds: QAServe, policy: Policy, cfg: SchedulerConfig) -> ServeResult:
     rng = np.random.RandomState(cfg.seed)
     n, m = ds.n, ds.m
@@ -92,6 +112,16 @@ def run_serving(ds: QAServe, policy: Policy, cfg: SchedulerConfig) -> ServeResul
     completed = np.zeros(n, bool)
     hedged_q = np.zeros(n, bool)
     service_seen: List[float] = []
+    fold_buf: List[int] = []        # completed queries awaiting store fold
+
+    def flush_fold(force: bool = False):
+        nonlocal sched_secs
+        if cfg.fold_online and fold_buf and (
+                force or len(fold_buf) >= cfg.fold_chunk):
+            t0 = time.perf_counter()
+            fold_completions(policy, ds, fold_buf)
+            sched_secs += time.perf_counter() - t0
+            fold_buf.clear()
 
     def inflight() -> int:
         return int(counts.sum())
@@ -160,13 +190,16 @@ def run_serving(ds: QAServe, policy: Policy, cfg: SchedulerConfig) -> ServeResul
         if not completed[qi]:
             completed[qi] = True
             assign[qi] = j          # first finisher wins (hedge semantics)
+            fold_buf.append(qi)
             for sid, sj, sft in live.get(qi, []):
                 cancelled.add(sid)  # kill the straggler copy now
                 counts[sj] -= 1
                 llm_secs -= max(sft - t, 0.0)   # un-charge unexecuted tail
             live[qi] = []
+        flush_fold()
         maybe_hedge()
 
+    flush_fold(force=True)
     ok = assign >= 0
     idxs = np.flatnonzero(ok)
     sr = float(ds.correct[idxs, assign[idxs]].mean()) if len(idxs) else 0.0

@@ -1,14 +1,51 @@
-"""Jit wrapper for the fused retrieval kernel (interpret on CPU)."""
+"""Jit entry points for fused retrieval.
+
+The Pallas kernels are selected on TPU; elsewhere the jnp references run —
+still device-resident single-jit functions (the kernels in interpret mode
+trade the fused memory schedule for grid-step overhead, so off-TPU the
+XLA-fused reference is the faster *and* equivalent path).  ``n_valid`` is a
+dynamic scalar so a growing ``VectorStore`` reuses one compilation per
+capacity, not one per append.
+"""
 from __future__ import annotations
 
 from functools import partial
 
 import jax
 
-from .kernel import topk_retrieval_kernel
+from .kernel import retrieval_vote_kernel, topk_retrieval_kernel
+from .ref import retrieval_vote_ref, topk_retrieval_ref
 
 
-@partial(jax.jit, static_argnames=("k", "bq", "tile"))
-def topk_retrieval(store, queries, k: int, *, bq: int = 128, tile: int = 512):
-    return topk_retrieval_kernel(store, queries, k, bq=bq, tile=tile,
-                                 interpret=jax.default_backend() != "tpu")
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("k", "bq", "tile", "use_kernel"))
+def topk_retrieval(store, queries, k: int, *, bq: int = 128, tile: int = 512,
+                   n_valid=None, use_kernel: bool = None):
+    """(vals (B, k), idx (B, k)) — any store size, any k (empty slots are
+    (NEG_INF, -1))."""
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if use_kernel:
+        return topk_retrieval_kernel(store, queries, k, bq=bq, tile=tile,
+                                     n_valid=n_valid, interpret=not _on_tpu())
+    return topk_retrieval_ref(store, queries, k, n_valid=n_valid)
+
+
+@partial(jax.jit, static_argnames=("k", "bq", "tile", "use_kernel"))
+def retrieval_vote(store, labels, queries, k: int, *, bq: int = 128,
+                   tile: int = 512, n_valid=None, use_kernel: bool = None):
+    """Fused sim → top-k → gather-labels → neighbour-mean vote.
+
+    Returns (vals (B, k), idx (B, k), votes (B, L)); votes average over the
+    valid neighbours only.  One jit boundary, no host round-trip.
+    """
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if use_kernel:
+        return retrieval_vote_kernel(store, labels, queries, k, bq=bq,
+                                     tile=tile, n_valid=n_valid,
+                                     interpret=not _on_tpu())
+    return retrieval_vote_ref(store, labels, queries, k, n_valid=n_valid)

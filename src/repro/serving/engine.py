@@ -107,18 +107,24 @@ class Endpoint:
 
 
 class MultiLLMServer:
-    """Router + endpoint pool with admission control and hedging."""
+    """Router + endpoint pool with admission control, hedging, and online
+    fold-back of completed requests into the router's vector store."""
 
     def __init__(self, endpoints: List[Endpoint], policy, *,
-                 batch_size: int = 0, hedge_after_steps: int = 0):
+                 batch_size: int = 0, hedge_after_steps: int = 0,
+                 fold_online: bool = False, fold_chunk: int = 0):
         self.endpoints = endpoints
         self.policy = policy
         cap = sum(e.L for e in endpoints)
         self.batch_size = batch_size or max(1, cap // 2)
         self.max_inflight = max(1, cap // 2)
         self.hedge_after = hedge_after_steps
+        self.fold_online = fold_online
+        self.fold_chunk = fold_chunk or self.batch_size
         self.queue: deque = deque()
         self.completed: List[Request] = []
+        self._fold_buf: List[Request] = []
+        self.folded = 0
         self.route_calls = 0
         self.route_seconds = 0.0
 
@@ -152,6 +158,23 @@ class MultiLLMServer:
             else:  # paper's queueing: wait for capacity
                 self.queue.appendleft(req)
 
+    def _fold(self, route_features, *, force: bool = False):
+        """Online half of the prediction plane: completed requests are folded
+        back into the policy's vector store (``policy.observe``) so later
+        routing decisions retrieve over them.  Uses the same feature producer
+        as admission — if it carries no labels (a live engine before human
+        feedback arrives), folding is a silent no-op."""
+        if not self.fold_online or not self._fold_buf:
+            return
+        if not force and len(self._fold_buf) < self.fold_chunk:
+            return
+        from repro.core.scheduler import fold_completions
+        feats = route_features(self._fold_buf)
+        if fold_completions(self.policy, feats,
+                            np.arange(len(self._fold_buf))):
+            self.folded += len(self._fold_buf)
+        self._fold_buf.clear()
+
     def run(self, route_features, *, max_steps: int = 10_000):
         steps = 0
         while (self.queue or self._inflight()) and steps < max_steps:
@@ -161,7 +184,10 @@ class MultiLLMServer:
                 done = e.step()
                 progressed = progressed or bool(done) or bool(e.active)
                 self.completed.extend(done)
+                self._fold_buf.extend(done)
             steps += 1
+            self._fold(route_features)
             if not progressed and not self.queue:
                 break
+        self._fold(route_features, force=True)
         return self.completed

@@ -49,19 +49,26 @@ def test_decode_attention_vs_ref(b, t, h, kh, d, window, pos):
     (1024, 64, 17, 8, 256),
     (2048, 128, 5, 16, 512),
     (512, 32, 128, 4, 128),
+    (700, 64, 17, 8, 512),     # store not a tile multiple (seed crashed)
+    (5, 32, 4, 8, 128),        # k > n_db (seed crashed)
 ])
 def test_topk_retrieval_vs_ref(ndb, d, b, k, tile):
+    from repro.kernels.topk_retrieval.kernel import topk_retrieval_kernel
     from repro.kernels.topk_retrieval.ops import topk_retrieval
     from repro.kernels.topk_retrieval.ref import topk_retrieval_ref
     st_ = jax.random.normal(KEY, (ndb, d))
     st_ = st_ / jnp.linalg.norm(st_, axis=1, keepdims=True)
     q = jax.random.normal(jax.random.fold_in(KEY, 1), (b, d))
     q = q / jnp.linalg.norm(q, axis=1, keepdims=True)
-    v1, i1 = topk_retrieval(st_, q, k, bq=64, tile=tile)
     v2, i2 = topk_retrieval_ref(st_, q, k)
-    assert float(jnp.max(jnp.abs(v1 - v2))) < 1e-5
-    # indices may permute within exact ties; compare as sets of values
-    assert float((jnp.sort(i1, 1) == jnp.sort(i2, 1)).mean()) > 0.999
+    # the Pallas kernel body (interpret off-TPU) and the dispatching jit
+    # entry point must both agree with the oracle
+    for v1, i1 in (topk_retrieval_kernel(st_, q, k, bq=64, tile=tile,
+                                         interpret=True),
+                   topk_retrieval(st_, q, k, bq=64, tile=tile)):
+        assert float(jnp.max(jnp.abs(v1 - v2))) < 1e-5
+        # indices may permute within exact ties; compare as sets of values
+        assert float((jnp.sort(i1, 1) == jnp.sort(i2, 1)).mean()) > 0.999
 
 
 @settings(max_examples=15, deadline=None)
