@@ -43,6 +43,17 @@ def trained_predictor(n_buckets: int = 10, steps: int = 150):
 
 
 @functools.lru_cache(maxsize=None)
+def hybrid_predictor(steps: int = 150):
+    """ECCOS-H (PR 2): trained dual heads + retrieval vote behind the
+    confidence-gated blend — the paper's full §3.1 predictor."""
+    from repro.core import HybridPredictor, PredictorConfig
+    train, _, _ = splits()
+    p = HybridPredictor(PredictorConfig(n_models=train.m, n_buckets=10))
+    p.fit(train, steps=steps, batch=64, seed=SEED)
+    return p
+
+
+@functools.lru_cache(maxsize=None)
 def s3_policy():
     from repro.core import S3Cost
     train, _, _ = splits()

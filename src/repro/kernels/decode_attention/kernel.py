@@ -1,10 +1,23 @@
-"""Split-KV flash-decode Pallas kernel.
+"""Split-KV flash-decode Pallas kernels: dense and paged.
 
-Grid: (B, K, n_splits). Each split computes attention of one decode token
-against its KV slice and emits partial (o·l, m, l) — the same merge triple the
-cross-shard ``psum`` combine uses in the SP-decode path (DESIGN.md §4), so
-this kernel is both the per-device decode op and the building block of the
-sequence-sharded 500k decode. ops.py performs the split/shard merge.
+Dense (``decode_attention_kernel``) — grid (B, K, n_splits). Each split
+computes attention of one decode token against its KV slice and emits partial
+(o·l, m, l) — the same merge triple the cross-shard ``psum`` combine uses in
+the SP-decode path (DESIGN.md §4), so this kernel is both the per-device
+decode op and the building block of the sequence-sharded 500k decode.
+``pos`` may be a scalar or a per-sequence ``(B,)`` length vector. Ragged
+cache lengths (t not a tile multiple) are zero-padded and NEG_INF-masked
+in-kernel.
+
+Paged (``paged_decode_attention_kernel``) — the serving-plane variant: the
+KV cache is a page pool ``(n_pages, page_size, K, D)`` shared by all
+sequences, and each sequence owns a row of a ``block_table (B, P)`` mapping
+its logical pages to physical ones.  The block table and the per-sequence
+``lens (B,)`` ride scalar prefetch (``pltpu.PrefetchScalarGridSpec``) so the
+BlockSpec index map performs the page indirection — no gathered dense copy
+of the cache ever materializes.  Grid (B, K, P): split s of sequence b reads
+physical page ``block_table[b, s]`` and masks logical positions ≥ lens[b].
+ops.py performs the split merge for both variants.
 """
 from __future__ import annotations
 
@@ -13,21 +26,25 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, pos_ref, on_ref, m_ref, l_ref, *,
-            bs: int, window: int, scale: float):
-    s_idx = pl.program_id(2)
-    start = s_idx * bs
+def _split_partials(q_ref, k_ref, v_ref, on_ref, m_ref, l_ref, *,
+                    start, pos, t_valid: int, window: int, scale: float):
+    """Shared split body for both variants: one decode token against one KV
+    split starting at logical position ``start``, masked to
+    [max(pos - window, 0), min(pos, t_valid)), emitting the (o·l, m, l)
+    merge triple."""
     q = q_ref[0, 0].astype(jnp.float32) * scale      # (G, D)
     k = k_ref[0, :, 0].astype(jnp.float32)           # (BS, D)
     v = v_ref[0, :, 0].astype(jnp.float32)
-    pos = pos_ref[0]
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (G, BS)
     kv_pos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    valid = kv_pos < pos
+    # the zero-padded ragged tail (kv_pos >= t_valid) is NEG_INF-masked
+    # alongside the not-yet-written region (kv_pos >= pos)
+    valid = (kv_pos < pos) & (kv_pos < t_valid)
     if window > 0:
         valid &= kv_pos > pos - 1 - window
     s = jnp.where(valid, s, NEG_INF)
@@ -40,25 +57,38 @@ def _kernel(q_ref, k_ref, v_ref, pos_ref, on_ref, m_ref, l_ref, *,
     l_ref[0, 0, 0] = l.astype(l_ref.dtype)
 
 
+def _kernel(q_ref, k_ref, v_ref, pos_ref, on_ref, m_ref, l_ref, *,
+            bs: int, t_valid: int, window: int, scale: float):
+    _split_partials(q_ref, k_ref, v_ref, on_ref, m_ref, l_ref,
+                    start=pl.program_id(2) * bs,
+                    pos=pos_ref[pl.program_id(0)],
+                    t_valid=t_valid, window=window, scale=scale)
+
+
 def decode_attention_kernel(q, k_cache, v_cache, pos, *, window: int = 0,
                             bs: int = 512, interpret: bool = True):
-    """q: (B,1,H,D); caches (B,T,K,D); pos scalar int32.
+    """q: (B,1,H,D); caches (B,T,K,D); pos scalar or (B,) int32 lengths.
 
     Returns partials (o_num (B,K,S,G,D), m (B,K,S,G), l (B,K,S,G)) where S is
-    the number of KV splits — merged by ops.merge_partials.
+    the number of KV splits — merged by ops.merge_partials.  T need not be a
+    multiple of ``bs``: the ragged tail is zero-padded and masked in-kernel.
     """
     b, _, h, d = q.shape
     t, kh = k_cache.shape[1], k_cache.shape[2]
     g = h // kh
     bs = min(bs, t)
-    assert t % bs == 0
-    ns = t // bs
+    ns = -(-t // bs)                                 # ceil: ragged tail ok
+    if ns * bs != t:
+        pad = [(0, 0)] * 4
+        pad[1] = (0, ns * bs - t)
+        k_cache = jnp.pad(k_cache, pad)
+        v_cache = jnp.pad(v_cache, pad)
 
     qT = q.reshape(b, kh, g, d)                      # (B, K, G, D)
-    kT = k_cache.transpose(0, 1, 2, 3)               # (B, T, K, D)
-    pos_arr = jnp.full((1,), pos, jnp.int32)
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
 
-    kernel = functools.partial(_kernel, bs=bs, window=window, scale=d ** -0.5)
+    kernel = functools.partial(_kernel, bs=bs, t_valid=t, window=window,
+                               scale=d ** -0.5)
     o, m, l = pl.pallas_call(
         kernel,
         grid=(b, kh, ns),
@@ -79,5 +109,70 @@ def decode_attention_kernel(q, k_cache, v_cache, pos, *, window: int = 0,
             jax.ShapeDtypeStruct((b, kh, ns, g), jnp.float32),
         ],
         interpret=interpret,
-    )(qT, kT, v_cache, pos_arr)
+    )(qT, k_cache, v_cache, pos_arr)
+    return o, m, l
+
+
+def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, on_ref, m_ref, l_ref,
+                  *, ps: int, p_max: int, window: int, scale: float):
+    # the k/v blocks hold the physical page bt_ref[b, s]; logically it spans
+    # positions [s·ps, (s+1)·ps) of sequence b, masked against lens[b]
+    _split_partials(q_ref, k_ref, v_ref, on_ref, m_ref, l_ref,
+                    start=pl.program_id(2) * ps,
+                    pos=len_ref[pl.program_id(0)],
+                    t_valid=p_max * ps, window=window, scale=scale)
+
+
+def paged_decode_attention_kernel(q, k_pages, v_pages, block_table, lens, *,
+                                  window: int = 0, interpret: bool = True):
+    """q: (B,1,H,D); pools (n_pages, PS, K, D); block_table (B, P) int32
+    physical page ids; lens (B,) int32 valid lengths.
+
+    Returns partials (o_num (B,K,P,G,D), m (B,K,P,G), l (B,K,P,G)) — one
+    split per logical page, merged by ops.merge_partials.  Pages past a
+    sequence's length are fully masked (m = NEG_INF) and vanish in the merge,
+    so every sequence may use any subset of its block-table row.
+    """
+    b, _, h, d = q.shape
+    ps, kh = k_pages.shape[1], k_pages.shape[2]
+    g = h // kh
+    p_max = block_table.shape[1]
+
+    qT = q.reshape(b, kh, g, d)
+    bt = jnp.asarray(block_table, jnp.int32)
+    lens = jnp.asarray(lens, jnp.int32)
+
+    kernel = functools.partial(_paged_kernel, ps=ps, p_max=p_max,
+                               window=window, scale=d ** -0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                       # (block_table, lens)
+        grid=(b, kh, p_max),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, k_, s_, bt_, ln_: (b_, k_, 0, 0)),
+            # page indirection: the physical page id comes from the prefetched
+            # block table — the pool is never gathered into a dense copy
+            pl.BlockSpec((1, ps, 1, d),
+                         lambda b_, k_, s_, bt_, ln_: (bt_[b_, s_], 0, k_, 0)),
+            pl.BlockSpec((1, ps, 1, d),
+                         lambda b_, k_, s_, bt_, ln_: (bt_[b_, s_], 0, k_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, g, d),
+                         lambda b_, k_, s_, bt_, ln_: (b_, k_, s_, 0, 0)),
+            pl.BlockSpec((1, 1, 1, g),
+                         lambda b_, k_, s_, bt_, ln_: (b_, k_, s_, 0)),
+            pl.BlockSpec((1, 1, 1, g),
+                         lambda b_, k_, s_, bt_, ln_: (b_, k_, s_, 0)),
+        ],
+    )
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kh, p_max, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, kh, p_max, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, kh, p_max, g), jnp.float32),
+        ],
+        interpret=interpret,
+    )(bt, lens, qT, k_pages, v_pages)
     return o, m, l

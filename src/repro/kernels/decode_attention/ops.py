@@ -1,4 +1,11 @@
-"""Split-KV decode: kernel partials + logsumexp merge (jit wrapper)."""
+"""Split-KV decode: kernel partials + logsumexp merge (jit wrappers).
+
+``decode_attention`` is the dense entry point; ``paged_decode_attention``
+is the serving-plane entry point over a page-pool cache with block-table
+indirection.  Both dispatch by backend: the Pallas kernel on TPU, the jnp
+reference (which gathers pages under XLA) elsewhere — the same pattern as
+``topk_retrieval.ops.retrieval_vote``.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -6,14 +13,15 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .kernel import decode_attention_kernel
+from .kernel import decode_attention_kernel, paged_decode_attention_kernel
 
 
 def merge_partials(o, m, l):
     """Merge per-split (o·l-normalized numerators, m, l) over the split axis.
 
     o: (B,K,S,G,D); m/l: (B,K,S,G). The identical formula merges cross-device
-    partials in the sequence-sharded decode path.
+    partials in the sequence-sharded decode path.  Fully-masked splits carry
+    m = NEG_INF and are annihilated by the exp correction.
     """
     m_glob = m.max(axis=2, keepdims=True)                   # (B,K,1,G)
     corr = jnp.exp(m - m_glob)
@@ -25,6 +33,7 @@ def merge_partials(o, m, l):
 @partial(jax.jit, static_argnames=("window", "bs", "interpret"))
 def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0,
                      bs: int = 512, interpret: bool | None = None):
+    """pos: scalar valid length, or per-sequence (B,) lengths."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     b, _, h, d = q.shape
@@ -32,4 +41,27 @@ def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0,
                                       window=window, bs=bs,
                                       interpret=interpret)
     out = merge_partials(o, m, l)                           # (B,K,G,D)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+@partial(jax.jit, static_argnames=("window", "use_kernel"))
+def paged_decode_attention(q, k_pages, v_pages, block_table, lens, *,
+                           window: int = 0, use_kernel: bool | None = None):
+    """q: (B,1,H,D); pools (n_pages, PS, K, D); block_table (B, P) int32;
+    lens (B,) int32 valid lengths.  Returns (B,1,H,D).
+
+    TPU: one Pallas launch with the block table on scalar prefetch (no dense
+    gather).  Off TPU: the jnp reference — XLA lowers the page gather.
+    """
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if not use_kernel:
+        from .ref import paged_decode_attention_ref
+        return paged_decode_attention_ref(q, k_pages, v_pages, block_table,
+                                          lens, window=window)
+    b, _, h, d = q.shape
+    o, m, l = paged_decode_attention_kernel(q, k_pages, v_pages, block_table,
+                                            lens, window=window,
+                                            interpret=False)
+    out = merge_partials(o, m, l)
     return out.reshape(b, 1, h, d).astype(q.dtype)

@@ -63,7 +63,9 @@ def main(argv=None):
     for j, e in enumerate(endpoints):
         n_j = int((assign == j).sum())
         print(f"  endpoint {j} ({pool_archs[j]}): {n_j} reqs, "
-              f"{e.busy_steps} decode steps")
+              f"{e.decoded_tokens} tokens in {e.busy_steps} decode chunks, "
+              f"{e.compile_count()} compiles, "
+              f"{e.batch_reprefills} batch re-prefills")
 
 
 if __name__ == "__main__":

@@ -34,6 +34,20 @@ def attn_decls(cfg: ModelConfig, *, cross: bool = False) -> dict:
     return decls
 
 
+def _pos2d(pos, s: int) -> jax.Array:
+    """Decode positions as a 2-D (batch-broadcastable, S) array.
+
+    ``pos`` scalar -> (1, S) shared by the batch; ``pos`` (B,) per-sequence
+    lengths -> (B, S) — the paged serving plane decodes ragged batches where
+    every sequence sits at its own position.
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    base = jnp.arange(s, dtype=jnp.int32)
+    if pos.ndim == 0:
+        return (pos + base)[None, :]
+    return pos[:, None] + base[None, :]
+
+
 def _mask(q_pos, kv_pos, *, causal: bool, window: int) -> jax.Array:
     """(..., Sq, Skv) boolean validity mask from absolute positions."""
     m = jnp.ones((q_pos.shape[-1], kv_pos.shape[-1]), bool)
@@ -104,7 +118,7 @@ def decode_attention_jnp(
     q: jax.Array,        # (B, 1, H, D)
     k_cache: jax.Array,  # (B, T, K, D)   (possibly seq-sharded over 'model')
     v_cache: jax.Array,  # (B, T, K, D)
-    pos: jax.Array,      # scalar int32 — current position (cache valid < pos)
+    pos: jax.Array,      # scalar int32 — or (B,) per-sequence valid lengths
     *,
     window: int = 0,
 ) -> jax.Array:
@@ -117,10 +131,11 @@ def decode_attention_jnp(
     s = jnp.einsum("bkgd,btkd->bkgt", qf, k_cache,
                    preferred_element_type=jnp.float32)
     kv_pos = jnp.arange(t)
-    valid = kv_pos < pos
+    pcol = jnp.asarray(pos, jnp.int32).reshape(-1, 1)  # (B or 1, 1)
+    valid = kv_pos[None, :] < pcol
     if window > 0:
-        valid = valid & (kv_pos > pos - 1 - window)
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        valid = valid & (kv_pos[None, :] > pcol - 1 - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     # softmax over (possibly sharded) T: GSPMD turns max/sum into psums
     m = s.max(axis=-1, keepdims=True)
     p = jnp.exp(s - m)
@@ -132,14 +147,14 @@ def decode_attention_jnp(
 
 def project_kv_token(cfg: ModelConfig, params: dict, x: jax.Array, pos,
                      use_rope: bool = True):
-    """K/V projection (+RoPE at pos) for one decode token. x: (B,1,d)."""
+    """K/V projection (+RoPE at pos) for one decode token. x: (B,1,d);
+    pos scalar or per-sequence (B,)."""
     k_new = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
     v_new = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
     if "bk" in params:
         k_new, v_new = k_new + params["bk"], v_new + params["bv"]
     if use_rope:
-        k_new = rope(k_new, pos + jnp.zeros((x.shape[1],), jnp.int32)[None, :],
-                     cfg.rope_theta)
+        k_new = rope(k_new, _pos2d(pos, x.shape[1]), cfg.rope_theta)
     return k_new, v_new
 
 
@@ -174,12 +189,31 @@ def attention_block(
         new_kv = None
     elif decode and prewritten:
         # cache already contains this token's K/V at position pos (written
-        # into the stacked carry buffer by the caller — one token column only)
+        # into the stacked carry buffer — or page pool — by the caller; one
+        # token column only).  pos may be per-sequence (B,) lengths.
         pos = cache["pos"]
         if use_rope:
-            q = rope(q, pos + jnp.zeros((x.shape[1],), jnp.int32)[None, :], cfg.rope_theta)
+            q = rope(q, _pos2d(pos, x.shape[1]), cfg.rope_theta)
         q = logical_shard(q, "batch", None, None, None)  # gather q heads
-        out = decode_attention_jnp(q, cache["k"], cache["v"], pos + 1, window=window)
+        if "k_pages" in cache:  # paged serving plane: block-table indirection
+            if cfg.use_pallas:
+                from repro.kernels.decode_attention.ops import paged_decode_attention
+                out = paged_decode_attention(
+                    q, cache["k_pages"], cache["v_pages"], cache["block_table"],
+                    jnp.asarray(pos, jnp.int32) + 1, window=window)
+            else:
+                # XLA path: gather the block-table pages and run the SAME
+                # mixed-precision body as the dense decode path (bf16
+                # operands, fp32 accumulation) — numerics must not depend on
+                # the cache layout
+                from repro.kernels.decode_attention.ref import gather_pages
+                out = decode_attention_jnp(
+                    q, gather_pages(cache["k_pages"], cache["block_table"]),
+                    gather_pages(cache["v_pages"], cache["block_table"]),
+                    jnp.asarray(pos, jnp.int32) + 1, window=window)
+        else:
+            out = decode_attention_jnp(q, cache["k"], cache["v"], pos + 1,
+                                       window=window)
         new_kv = None
     elif decode and kv_x is None:
         k_new = jnp.einsum("bsd,dhk->bshk", src, params["wk"])

@@ -92,7 +92,9 @@ def hymba_layer(cfg: ModelConfig, params: dict, x: jax.Array, *,
     attn_cache = None
     ssm_state = None
     if cache is not None:
-        attn_cache = {"k": cache["k"], "v": cache["v"], "pos": cache["pos"]}
+        attn_cache = {k: cache[k] for k in
+                      ("k", "v", "k_pages", "v_pages", "block_table", "pos")
+                      if k in cache}
         ssm_state = {"s": cache["s"], "conv": cache["conv"]}
 
     # attention branch produces (B,S,d) via its own wo; to mirror the paper we

@@ -92,6 +92,17 @@ def _empty_cache_for(cfg: ModelConfig, kind: LayerKind, batch: int, t_max: int,
     return out
 
 
+def _ffn_residual(cfg: ModelConfig, kind: LayerKind, params: dict,
+                  x: jax.Array) -> jax.Array:
+    """Shared post-attention tail: ln2 + (MoE or dense) FFN residual — one
+    definition so the full-sequence, dense-decode and paged-decode paths
+    cannot drift apart."""
+    f = rms_norm(x, params["ln2"], cfg.norm_eps)
+    if kind.is_moe:
+        return x + moe_block(cfg, params["ffn"], f)
+    return x + mlp(params["ffn"], f)
+
+
 def _apply_layer(cfg: ModelConfig, kind: LayerKind, params: dict, x: jax.Array,
                  *, q_offset=0, cache: Optional[dict] = None,
                  enc_memory: Optional[jax.Array] = None):
@@ -129,19 +140,12 @@ def _apply_layer(cfg: ModelConfig, kind: LayerKind, params: dict, x: jax.Array,
                 )
                 new_cache["ck"], new_cache["cv"] = ckv
             x = x + ca
-        f = rms_norm(x, params["ln2"], cfg.norm_eps)
-        if kind.is_moe:
-            x = x + moe_block(cfg, params["ffn"], f)
-        else:
-            x = x + mlp(params["ffn"], f)
-        return x, new_cache
+        return _ffn_residual(cfg, kind, params, x), new_cache
     if kind.block == "hymba":
         hc = cache
         out, (kv, ssm) = hymba_layer(cfg, params["hymba"], x, window=kind.window,
                                      q_offset=q_offset, cache=hc)
-        x = x + out
-        f = rms_norm(x, params["ln2"], cfg.norm_eps)
-        x = x + mlp(params["ffn"], f)
+        x = _ffn_residual(cfg, kind, params, x + out)
         if kv is not None:
             new_cache["k"], new_cache["v"] = kv
         if ssm is not None:
@@ -219,12 +223,7 @@ def _decode_layer(cfg: ModelConfig, kind: LayerKind, params: dict, x: jax.Array,
             ca, _ = attention_block(cfg, params["cross"], hc, causal=False,
                                     use_rope=False, cache=cc, cross_cached=True)
             x = x + ca
-        f = rms_norm(x, params["ln2"], cfg.norm_eps)
-        if kind.is_moe:
-            x = x + moe_block(cfg, params["ffn"], f)
-        else:
-            x = x + mlp(params["ffn"], f)
-        return x, ns
+        return _ffn_residual(cfg, kind, params, x), ns
     if kind.block == "hymba":
         h = rms_norm(x, params["hymba"]["norm"], cfg.norm_eps)
         k_new, v_new = project_kv_token(cfg, params["hymba"]["attn"], h, pos)
@@ -237,9 +236,7 @@ def _decode_layer(cfg: ModelConfig, kind: LayerKind, params: dict, x: jax.Array,
               "conv": _slice_layer(stacked["conv"], i)}
         out, (_, ssm) = hymba_layer(cfg, params["hymba"], x, window=kind.window,
                                     cache=lc, prewritten=True)
-        x = x + out
-        f = rms_norm(x, params["ln2"], cfg.norm_eps)
-        x = x + mlp(params["ffn"], f)
+        x = _ffn_residual(cfg, kind, params, x + out)
         ns["s"] = _write_layer(stacked["s"], ssm["s"], i)
         ns["conv"] = _write_layer(stacked["conv"], ssm["conv"], i)
         return x, ns
@@ -256,6 +253,104 @@ def _decode_layer(cfg: ModelConfig, kind: LayerKind, params: dict, x: jax.Array,
         for k in ("c", "n", "h"):
             ns[k] = _write_layer(stacked[k], nst[k], i)
         return x + out, ns
+    raise ValueError(kind.block)
+
+
+def _empty_paged_for(cfg: ModelConfig, kind: LayerKind, n_slots: int,
+                     n_pages: int, page_size: int, dtype) -> Dict[str, Any]:
+    """Per-layer paged-serving buffers: attention KV lives in a shared page
+    pool ``(n_pages, page_size, K, D)`` (block-table indirection picks a
+    sequence's pages); recurrent state is per-slot ``(n_slots, ...)``."""
+    out: Dict[str, Any] = {}
+    if kind.block in ("attn", "hymba"):
+        k, hd = cfg.n_kv_heads, cfg.hd
+        int8 = cfg.kv_cache_dtype == "int8" and kind.block == "attn"
+        cdt = jnp.int8 if int8 else dtype
+        out["k"] = jnp.zeros((n_pages, page_size, k, hd), cdt)
+        out["v"] = jnp.zeros((n_pages, page_size, k, hd), cdt)
+        if int8:
+            out["k_scale"] = jnp.zeros((n_pages, page_size, k), jnp.float32)
+            out["v_scale"] = jnp.zeros((n_pages, page_size, k), jnp.float32)
+    if kind.block == "xdec":
+        raise NotImplementedError("paged decode does not cover enc-dec")
+    if kind.block == "hymba":
+        h, p, n = cfg.n_heads, cfg.hd, cfg.ssm_state
+        out["s"] = jnp.zeros((n_slots, h, n, p), jnp.float32)
+        out["conv"] = jnp.zeros((n_slots, cfg.ssm_conv - 1, h * p), dtype)
+    if kind.block == "mlstm":
+        d, d_inner, h, dk, dv = xlstm_dims(cfg)
+        out["s"] = jnp.zeros((n_slots, h, dk, dv + 1), jnp.float32)
+        out["conv"] = jnp.zeros((n_slots, cfg.ssm_conv - 1, d_inner), dtype)
+    if kind.block == "slstm":
+        h = cfg.n_heads
+        dh = cfg.d_model // h
+        for f in ("c", "n", "h"):
+            out[f] = jnp.zeros((n_slots, h, dh), jnp.float32)
+    return out
+
+
+def _decode_layer_paged(cfg: ModelConfig, kind: LayerKind, params: dict,
+                        x: jax.Array, stacked: Dict[str, jax.Array], i,
+                        block_table, lens):
+    """One decode layer over the paged state: write this token's K/V into
+    its page slot at (block_table[b, lens[b]//PS], lens[b]%PS), then attend
+    through the block-table indirection.  Recurrent blocks carry per-slot
+    state exactly like the dense path.  Returns (x, new_stacked)."""
+    if kind.block in ("mlstm", "slstm"):
+        return _decode_layer(cfg, kind, params, x, stacked, i,
+                             jnp.zeros((), jnp.int32))
+    ns = dict(stacked)
+    page_size = stacked["k"].shape[2]                # (L, n_pages, PS, K, D)
+    pidx = jnp.take_along_axis(block_table, (lens // page_size)[:, None],
+                               axis=1)[:, 0]         # (B,) physical page
+    off = lens % page_size
+
+    def write_token(h, attn_params):
+        k_new, v_new = project_kv_token(cfg, attn_params, h, lens)
+        int8 = "k_scale" in stacked
+        if int8:
+            k_new, ksc = _quant_kv(k_new)
+            v_new, vsc = _quant_kv(v_new)
+            ns["k_scale"] = stacked["k_scale"].at[i, pidx, off].set(ksc[:, 0])
+            ns["v_scale"] = stacked["v_scale"].at[i, pidx, off].set(vsc[:, 0])
+        ns["k"] = stacked["k"].at[i, pidx, off].set(
+            k_new[:, 0].astype(stacked["k"].dtype))
+        ns["v"] = stacked["v"].at[i, pidx, off].set(
+            v_new[:, 0].astype(stacked["v"].dtype))
+        if int8:
+            # int8 pools: dequantize a gathered dense view (the fused paged
+            # kernel path is bf16-only)
+            from repro.kernels.decode_attention.ref import gather_pages
+            kd = gather_pages(_slice_layer(ns["k"], i), block_table).astype(cfg.dtype)
+            vd = gather_pages(_slice_layer(ns["v"], i), block_table).astype(cfg.dtype)
+            b, p = block_table.shape
+            ksc = jnp.take(_slice_layer(ns["k_scale"], i), block_table,
+                           axis=0).reshape(b, p * page_size, -1)
+            vsc = jnp.take(_slice_layer(ns["v_scale"], i), block_table,
+                           axis=0).reshape(b, p * page_size, -1)
+            return {"k": kd * ksc[..., None].astype(cfg.dtype),
+                    "v": vd * vsc[..., None].astype(cfg.dtype), "pos": lens}
+        return {"k_pages": _slice_layer(ns["k"], i),
+                "v_pages": _slice_layer(ns["v"], i),
+                "block_table": block_table, "pos": lens}
+
+    if kind.block == "attn":
+        h = rms_norm(x, params["ln1"], cfg.norm_eps)
+        lc = write_token(h, params["attn"])
+        a, _ = attention_block(cfg, params["attn"], h, causal=True,
+                               window=kind.window, cache=lc, prewritten=True)
+        return _ffn_residual(cfg, kind, params, x + a), ns
+    if kind.block == "hymba":
+        h = rms_norm(x, params["hymba"]["norm"], cfg.norm_eps)
+        lc = write_token(h, params["hymba"]["attn"])
+        lc.update({"s": _slice_layer(stacked["s"], i),
+                   "conv": _slice_layer(stacked["conv"], i)})
+        out, (_, ssm) = hymba_layer(cfg, params["hymba"], x, window=kind.window,
+                                    cache=lc, prewritten=True)
+        x = _ffn_residual(cfg, kind, params, x + out)
+        ns["s"] = _write_layer(stacked["s"], ssm["s"], i)
+        ns["conv"] = _write_layer(stacked["conv"], ssm["conv"], i)
+        return x, ns
     raise ValueError(kind.block)
 
 
@@ -355,6 +450,24 @@ class DecoderLM:
             segs.append(seg)
         return {"pos": jnp.zeros((), jnp.int32), "segs": segs}
 
+    def empty_paged_state(self, n_slots: int, n_pages: int,
+                          page_size: int) -> dict:
+        """Fixed-shape serving state: KV page pools shared by ``n_slots``
+        sequence slots (block-table indirection) + per-slot recurrent state.
+        Unlike ``empty_cache`` there is no global ``pos`` — per-sequence
+        lengths are an input of ``decode_step_paged``."""
+        cfg = self.cfg
+        segs = []
+        for count, pattern in self.plan:
+            seg = []
+            for kind in pattern:
+                one = _empty_paged_for(cfg, kind, n_slots, n_pages,
+                                       page_size, cfg.dtype)
+                seg.append(jax.tree.map(
+                    lambda a: jnp.broadcast_to(a[None], (count,) + a.shape), one))
+            segs.append(seg)
+        return {"segs": segs}
+
     # -- prefill: build cache over a prompt ---------------------------------
     def prefill(self, params, tokens=None, embeds=None):
         cfg = self.cfg
@@ -409,3 +522,41 @@ class DecoderLM:
         logits = jnp.einsum("bd,vd->bv", h[:, -1], self._out_table(params),
                             preferred_element_type=jnp.float32)
         return {"pos": pos + 1, "segs": new_segs}, logits
+
+    # -- paged single-token decode -------------------------------------------
+    #
+    # The serving-plane twin of decode_step: the KV cache is a page pool with
+    # a (B, P) block table, every sequence sits at its own position
+    # (lens: (B,)), and shapes depend only on (n_slots, n_pages, page_size) —
+    # admissions and completions never change them, so one compilation
+    # serves the endpoint's whole lifetime.
+    def decode_step_paged(self, params, state: dict, token: jax.Array,
+                          block_table: jax.Array, lens: jax.Array):
+        """token: (B,1) int32; block_table (B,P) int32 physical page ids;
+        lens (B,) int32 tokens already in cache. Returns (new_state, logits).
+        The token's K/V is written at position lens[b] (page
+        block_table[b, lens[b]//PS]); the caller advances ``lens``."""
+        cfg = self.cfg
+        block_table = jnp.asarray(block_table, jnp.int32)
+        lens = jnp.asarray(lens, jnp.int32)
+        x = self._embed_input(params, token, None)
+        new_segs: List[list] = []
+        for si, (count, pattern) in enumerate(self.plan):
+            seg_params = params["segs"][si]
+            seg_state = tuple(state["segs"][si])
+
+            def body(carry, lp, _pattern=pattern):
+                x, sc, i = carry
+                sc = list(sc)
+                for j, kind in enumerate(_pattern):
+                    x, sc[j] = _decode_layer_paged(cfg, kind, lp[j], x, sc[j],
+                                                   i, block_table, lens)
+                return (x, tuple(sc), i + 1), None
+
+            init = (x, seg_state, jnp.zeros((), jnp.int32))
+            (x, seg_state, _), _ = jax.lax.scan(body, init, seg_params)
+            new_segs.append(list(seg_state))
+        h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bd,vd->bv", h[:, -1], self._out_table(params),
+                            preferred_element_type=jnp.float32)
+        return {"segs": new_segs}, logits

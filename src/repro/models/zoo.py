@@ -167,6 +167,84 @@ def pad_cache(cache: dict, t_max: int) -> dict:
     return {"pos": cache["pos"], "segs": [grow(s) for s in cache["segs"]]}
 
 
+# ---------------------------------------------------------------------------
+# Page layout helpers (paged serving plane)
+#
+# The serving engine's admission path: prefill ONE request (B=1, prompt
+# padded to a length bucket) and scatter its cache into the endpoint's
+# fixed-shape paged state — KV goes to this request's pages, recurrent state
+# to its slot.  This replaces the restart path (re-prefill the whole packed
+# batch + ``pad_cache`` copy of every sequence) for serving; ``pad_cache``
+# remains for the restart baseline and single-sequence tooling.
+# ---------------------------------------------------------------------------
+
+_PAGED_KV_KEYS = ("k", "v")
+_PAGED_SCALE_KEYS = ("k_scale", "v_scale")
+# every cache leaf living in a shared page pool (vs per-slot recurrent
+# state) — the serving engine classifies models by this same set
+PAGED_POOL_KEYS = _PAGED_KV_KEYS + _PAGED_SCALE_KEYS
+
+
+def prefill_into_pages(state: dict, cache: dict, page_ids, slot,
+                       page_size: int) -> dict:
+    """Scatter a single-request prefill ``cache`` (batch 1, length t) into a
+    paged ``state`` (from ``DecoderLM.empty_paged_state``).
+
+    ``page_ids``: (ceil(t / page_size),) physical pages owned by the request
+    (its block-table prefix); ``slot``: the request's sequence slot.  KV
+    positions past t (the bucket pad tail) scatter zeros — they are masked by
+    ``lens`` at attention time and overwritten as decode advances.  Shapes
+    depend only on (t, page_ids length), so one compilation serves every
+    admission in the same prompt-length bucket.
+    """
+    page_ids = jnp.asarray(page_ids, jnp.int32)
+    n_chunk = page_ids.shape[0]
+
+    def write_layer(layer_state: dict, layer_cache: dict) -> dict:
+        new = dict(layer_state)
+        for key, leaf in layer_cache.items():
+            pool = layer_state[key]
+            if key in _PAGED_KV_KEYS:                # (L, 1, t, K, D)
+                l, _, t, kh, hd = leaf.shape
+                kv = jnp.pad(leaf[:, 0], ((0, 0), (0, n_chunk * page_size - t),
+                                          (0, 0), (0, 0)))
+                kv = kv.reshape(l, n_chunk, page_size, kh, hd)
+                new[key] = pool.at[:, page_ids].set(kv.astype(pool.dtype))
+            elif key in _PAGED_SCALE_KEYS:           # (L, 1, t, K)
+                l, _, t, kh = leaf.shape
+                sc = jnp.pad(leaf[:, 0], ((0, 0), (0, n_chunk * page_size - t),
+                                          (0, 0)))
+                sc = sc.reshape(l, n_chunk, page_size, kh)
+                new[key] = pool.at[:, page_ids].set(sc.astype(pool.dtype))
+            else:                                    # per-slot recurrent state
+                new[key] = pool.at[:, slot].set(leaf[:, 0].astype(pool.dtype))
+        return new
+
+    segs = [[write_layer(ls, lc) for ls, lc in zip(seg_s, seg_c)]
+            for seg_s, seg_c in zip(state["segs"], cache["segs"])]
+    return {"segs": segs}
+
+
+def reset_slot(state: dict, slot) -> dict:
+    """Zero a slot's recurrent state (admission of a prompt too short to
+    prefill).  KV pages need no reset — ``lens`` masking covers them."""
+
+    def zero_layer(layer_state: dict) -> dict:
+        new = dict(layer_state)
+        for key, pool in layer_state.items():
+            if key not in PAGED_POOL_KEYS:
+                new[key] = pool.at[:, slot].set(jnp.zeros_like(pool[:, slot]))
+        return new
+
+    return {"segs": [[zero_layer(ls) for ls in seg] for seg in state["segs"]]}
+
+
+def pages_per_request(prompt_len: int, max_new: int, page_size: int) -> int:
+    """Physical pages a request needs over its whole lifetime: prefix plus
+    every decode write (positions 0 .. prompt_len + max_new - 1)."""
+    return -(-(prompt_len + max_new) // page_size)
+
+
 def param_count_estimate(cfg: ModelConfig) -> int:
     from repro.common import count_params
     return count_params(build_model(cfg).decls())

@@ -1,19 +1,37 @@
 """Multi-LLM serving engine: the ECCOS router in front of a pool of zoo
-models with continuous batching, per-endpoint concurrency limits, and
-straggler hedging.
+models with paged-KV continuous batching, per-endpoint concurrency limits,
+and straggler hedging.
 
-Each :class:`Endpoint` owns one architecture (params + jitted prefill /
-decode_step) and serves up to ``L`` concurrent sequences by batched one-token
-decode steps over a packed active set. The :class:`MultiLLMServer` admits
-requests per the paper's capacity rule, routes batches through a Policy
-(OmniRouter or a baseline), and accounts true cost/success via the QAServe
-ground truth when available.
+Each :class:`Endpoint` owns one architecture and serves up to ``L``
+concurrent sequences out of a **fixed-shape paged state**: KV lives in a
+page pool ``(n_pages, page_size, K, D)`` shared by all slots, each slot owns
+a row of a block table, and per-sequence lengths replace the packed batch's
+single position.  Admitting a request prefills *only that request* (prompt
+padded to a length bucket) and scatters its KV into free pages; a completion
+frees pages without touching any other sequence.  Shapes never change, so an
+endpoint compiles its decode loop exactly once and its prefill once per
+prompt-length bucket — admissions and completions retrace nothing.
+
+The decode inner loop is fused: ``sync_every`` single-token steps run as one
+jitted ``lax.scan`` chunk with on-device argmax sampling and a done-mask, so
+the host syncs once per chunk instead of once per token, and
+:meth:`MultiLLMServer.run` dispatches every endpoint's chunk before blocking
+on any result (async dispatch overlaps the pool).
+
+:class:`RestartEndpoint` keeps the seed's restart-based batching (re-prefill
+the whole packed, left-padded batch on every admit and completion) as the
+benchmark baseline — ``benchmarks/bench_serving.py`` races the two.
+
+The :class:`MultiLLMServer` admits requests per the paper's capacity rule,
+routes batches through a Policy (OmniRouter or a baseline), and accounts
+true cost/success via the QAServe ground truth when available.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
+from functools import partial
 from typing import Dict, List, Optional
 
 import jax
@@ -22,7 +40,33 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import build_model
-from repro.models.zoo import pad_cache
+from repro.models.zoo import (PAGED_POOL_KEYS, pad_cache, pages_per_request,
+                              prefill_into_pages, reset_slot)
+
+
+def _jit_cache_size(fn) -> int:
+    """Compilation count of a jitted callable.  ``_cache_size`` is a private
+    jax API — degrade to 0 rather than break serving if it moves."""
+    return int(getattr(fn, "_cache_size", lambda: 0)())
+
+
+def null_route_features(batch):
+    """Feature producer for driving :class:`MultiLLMServer` without a
+    dataset: a load-balancing-only RouteBatch (uniform prices/lengths, no
+    ground truth).  Used by the serving benchmark and tests to isolate the
+    serving plane from the prediction plane."""
+    from repro.core.baselines import RouteBatch
+
+    class _Features:
+        queries = ["q"] * len(batch)
+
+        def route_batch(self, loads, counts, with_truth=False):
+            n, m = len(batch), len(loads)
+            return RouteBatch(queries=["q"] * n, input_len=np.ones(n),
+                              price_in=np.ones(m), price_out=np.ones(m),
+                              loads=loads, counts=counts)
+
+    return _Features()
 
 
 @dataclasses.dataclass
@@ -39,8 +83,231 @@ class Request:
     hedged: bool = False
 
 
+class PageAllocator:
+    """Host-side free lists for the paged state: physical KV pages and
+    sequence slots.  Page 0 is the *dump page* — never handed out; free and
+    finished slots keep their block-table rows zeroed so their (masked)
+    in-flight writes land there instead of in anyone's live pages."""
+
+    def __init__(self, n_pages: int, n_slots: int):
+        self.n_pages = n_pages
+        self.n_slots = n_slots
+        self.free_pages: List[int] = list(range(n_pages - 1, 0, -1))
+        self.free_slots: List[int] = list(range(n_slots - 1, -1, -1))
+
+    def alloc_pages(self, n: int) -> List[int]:
+        if n > len(self.free_pages):
+            raise RuntimeError(f"page pool exhausted: want {n}, "
+                               f"free {len(self.free_pages)}")
+        return [self.free_pages.pop() for _ in range(n)]
+
+    def release_pages(self, pages: List[int]):
+        for p in pages:
+            assert 0 < p < self.n_pages and p not in self.free_pages
+            self.free_pages.append(p)
+
+    def alloc_slot(self) -> int:
+        return self.free_slots.pop()
+
+    def release_slot(self, slot: int):
+        assert slot not in self.free_slots
+        self.free_slots.append(slot)
+
+
 class Endpoint:
-    """One pool member: a zoo model served with batched decode."""
+    """One pool member: a zoo model served from a fixed-shape paged state."""
+
+    def __init__(self, cfg: ModelConfig, *, max_concurrency: int = 4,
+                 t_max: int = 128, seed: int = 0, page_size: int = 16,
+                 sync_every: int = 8):
+        if cfg.family == "encdec":
+            raise NotImplementedError("paged serving covers decoder LMs; "
+                                      "serve enc-dec via RestartEndpoint")
+        self.cfg = cfg
+        self.L = max_concurrency
+        self.page_size = page_size
+        self.pages_per_slot = -(-t_max // page_size)
+        self.t_max = self.pages_per_slot * page_size
+        self.sync_every = sync_every
+        self.model = build_model(cfg)
+        self.params = self.model.init(jax.random.PRNGKey(seed))
+
+        probe = jax.eval_shape(
+            lambda: self.model.empty_paged_state(1, 1, page_size))
+        leaves_keys = {k for seg in probe["segs"] for layer in seg
+                       for k in layer}
+        self._has_kv = "k" in leaves_keys
+        self._has_recurrent = bool(leaves_keys - set(PAGED_POOL_KEYS))
+        # worst case: every slot at t_max, +1 for the dump page
+        n_pages = 1 + self.L * self.pages_per_slot if self._has_kv else 1
+        self.alloc = PageAllocator(n_pages, self.L)
+        self._state = self.model.empty_paged_state(self.L, n_pages, page_size)
+
+        # host mirrors of the per-slot device vectors
+        self.block_table = np.zeros((self.L, self.pages_per_slot), np.int32)
+        self.lens = np.zeros((self.L,), np.int32)
+        self.remaining = np.zeros((self.L,), np.int32)
+        self.last_tokens = np.zeros((self.L, 1), np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * self.L
+        self._slot_pages: List[List[int]] = [[] for _ in range(self.L)]
+
+        self._prefill = jax.jit(self.model.prefill)
+        self._write = jax.jit(partial(prefill_into_pages,
+                                      page_size=page_size),
+                              donate_argnums=(0,))
+        self._reset = jax.jit(reset_slot, donate_argnums=(0,))
+        self._chunk = jax.jit(self._chunk_fn, donate_argnums=(1,))
+
+        self.busy_steps = 0          # chunks dispatched
+        self.decoded_tokens = 0      # real (non-masked) tokens emitted
+        self.prefill_calls = 0       # one per admitted request
+        self.batch_reprefills = 0    # ALWAYS 0 here — the restart metric
+
+    # -- instrumentation -----------------------------------------------------
+    def compile_count(self) -> int:
+        """Total jit compilations across this endpoint's device functions.
+        Constant once every prompt-length bucket has been seen — admissions
+        and completions retrace nothing (the paged contract)."""
+        return sum(_jit_cache_size(f) for f in
+                   (self._prefill, self._write, self._reset, self._chunk))
+
+    def active_count(self) -> int:
+        return self.L - len(self.alloc.free_slots)
+
+    def has_capacity(self) -> bool:
+        return bool(self.alloc.free_slots)
+
+    def can_serve(self, req: Request) -> bool:
+        """Whether the request fits this endpoint's fixed shapes at all:
+        prompt + output budget within t_max.  Checked by the server at
+        admission so an oversized request is failed, not crashed on."""
+        return len(req.tokens) - 1 + req.max_new <= self.t_max
+
+    # -- admission -----------------------------------------------------------
+    def _bucket(self, plen: int) -> int:
+        """Prompt-length bucket.  Attention KV tolerates right-pad garbage
+        (masked by ``lens``), so pure-attention models bucket to page
+        multiples — one prefill compilation per bucket.  Recurrent state
+        (SSM/conv/xLSTM) integrates every input token, so hybrid models
+        prefill at exact length to stay bit-identical."""
+        if self._has_recurrent:
+            return plen
+        return -(-plen // self.page_size) * self.page_size
+
+    def admit(self, req: Request):
+        """Prefill this request only and wire its pages/slot into the fixed
+        batch — no other sequence is touched, nothing is re-traced."""
+        assert self.has_capacity()
+        toks = np.asarray(req.tokens, np.int32)
+        plen = len(toks) - 1            # last prompt token is fed to decode
+        if plen + req.max_new > self.t_max:
+            # before any slot/page mutation: the caller gets a clean error
+            raise ValueError(f"request {req.rid} needs {plen + req.max_new} "
+                             f"positions, endpoint t_max={self.t_max}")
+        req.started = time.perf_counter()
+        req.output = []
+        slot = self.alloc.alloc_slot()
+        if self._has_kv:
+            pages = self.alloc.alloc_pages(
+                pages_per_request(plen, req.max_new, self.page_size))
+            self._slot_pages[slot] = pages
+            self.block_table[slot] = 0
+            self.block_table[slot, :len(pages)] = pages
+        if plen > 0:
+            bucket = self._bucket(plen)
+            ptoks = np.zeros((1, bucket), np.int32)
+            ptoks[0, :plen] = toks[:-1]
+            cache, _ = self._prefill(self.params, jnp.asarray(ptoks))
+            n_prefill_pages = -(-bucket // self.page_size) if self._has_kv else 0
+            page_ids = np.asarray(
+                self._slot_pages[slot][:n_prefill_pages], np.int32)
+            self._state = self._write(self._state, cache,
+                                      jnp.asarray(page_ids),
+                                      jnp.asarray(slot, jnp.int32))
+            self.prefill_calls += 1
+        elif self._has_recurrent:
+            self._state = self._reset(self._state, jnp.asarray(slot, jnp.int32))
+        self.lens[slot] = plen
+        self.remaining[slot] = req.max_new
+        self.last_tokens[slot, 0] = toks[-1]
+        self.slot_req[slot] = req
+
+    # -- fused decode chunk --------------------------------------------------
+    def _chunk_fn(self, params, state, block_table, last, lens, remaining):
+        """``sync_every`` decode steps in one jit: on-device argmax sampling,
+        done-mask freezes finished sequences (their writes land at their own
+        frozen position, or the dump page once the slot is freed).  The host
+        sees one sync per chunk."""
+
+        def body(carry, _):
+            state, last, lens, remaining = carry
+            state, logits = self.model.decode_step_paged(
+                params, state, last, block_table, lens)
+            nxt = jnp.argmax(logits[:, : self.cfg.vocab_size],
+                             axis=-1).astype(jnp.int32)
+            active = remaining > 0
+            nxt = jnp.where(active, nxt, 0)
+            lens = lens + active.astype(jnp.int32)
+            remaining = jnp.maximum(remaining - 1, 0)
+            return (state, nxt[:, None], lens, remaining), nxt
+
+        (state, last, lens, remaining), toks = jax.lax.scan(
+            body, (state, last, lens, remaining), None,
+            length=self.sync_every)
+        return state, last, lens, remaining, toks.T   # toks: (B, sync_every)
+
+    def step_begin(self):
+        """Dispatch one decode chunk (async) — does not block."""
+        if self.active_count() == 0:
+            return None
+        out = self._chunk(self.params, self._state,
+                          jnp.asarray(self.block_table),
+                          jnp.asarray(self.last_tokens),
+                          jnp.asarray(self.lens),
+                          jnp.asarray(self.remaining))
+        self._state = out[0]
+        self.busy_steps += 1
+        return out[1:]
+
+    def step_end(self, pending) -> List[Request]:
+        """Block on the chunk result, distribute tokens, free completions."""
+        if pending is None:
+            return []
+        last, lens, remaining, toks = (np.array(x) for x in pending)
+        finished = []
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            take = int(min(self.remaining[slot], self.sync_every))
+            req.output.extend(int(t) for t in toks[slot, :take])
+            self.decoded_tokens += take
+            if remaining[slot] == 0:
+                req.done = True
+                req.finished = time.perf_counter()
+                finished.append(req)
+                self.slot_req[slot] = None
+                self.block_table[slot] = 0
+                if self._has_kv:
+                    self.alloc.release_pages(self._slot_pages[slot])
+                    self._slot_pages[slot] = []
+                self.alloc.release_slot(slot)
+                lens[slot] = 0
+                last[slot] = 0
+        self.last_tokens = last
+        self.lens = lens
+        self.remaining = remaining
+        return finished
+
+    def step(self) -> List[Request]:
+        """One decode chunk for every active sequence (dispatch + collect)."""
+        return self.step_end(self.step_begin())
+
+
+class RestartEndpoint:
+    """The seed's restart-based batching, kept as the benchmark baseline:
+    every admit and completion re-prefills the *entire* packed batch,
+    left-pad realignment makes every sequence pay the longest sequence's
+    cost, and the changing ``maxlen`` retraces prefill/decode per event."""
 
     def __init__(self, cfg: ModelConfig, *, max_concurrency: int = 4,
                  t_max: int = 128, seed: int = 0):
@@ -51,16 +318,25 @@ class Endpoint:
         self.params = self.model.init(jax.random.PRNGKey(seed))
         self.active: List[Request] = []
         self._cache = None
+        self._prefill = jax.jit(self.model.prefill)
         self._decode = jax.jit(self.model.decode_step)
         self.busy_steps = 0
+        self.decoded_tokens = 0
+        self.prefill_calls = 0
+        self.batch_reprefills = 0
+
+    def compile_count(self) -> int:
+        return _jit_cache_size(self._prefill) + _jit_cache_size(self._decode)
+
+    def active_count(self) -> int:
+        return len(self.active)
 
     def has_capacity(self) -> bool:
         return len(self.active) < self.L
 
     def admit(self, req: Request):
-        """Prefill the request and merge into the active batch (restart-based
-        continuous batching: re-prefill the packed batch — simple and correct;
-        block-table paging is the production upgrade path)."""
+        """Prefill the request and merge into the active batch by restarting
+        (re-prefilling) the whole packed batch."""
         assert self.has_capacity()
         req.started = time.perf_counter()
         req.output = []
@@ -71,25 +347,32 @@ class Endpoint:
         if not self.active:
             self._cache = None
             return
+        self.batch_reprefills += 1
+        self.prefill_calls += 1
         maxlen = max(len(r.tokens) + len(r.output or []) for r in self.active)
         toks = np.zeros((len(self.active), maxlen), np.int32)
         for i, r in enumerate(self.active):
             seq = list(r.tokens) + list(r.output or [])
             toks[i, -len(seq):] = seq  # left-pad
-        cache, _ = self.model.prefill(self.params, jnp.asarray(toks[:, :-1]))
+        cache, _ = self._prefill(self.params, jnp.asarray(toks[:, :-1]))
         self._cache = pad_cache(cache, maxlen - 1 + self.t_max)
         self._last_tokens = jnp.asarray(toks[:, -1:])
 
-    def step(self):
-        """One batched decode step for every active sequence."""
+    def step_begin(self):
         if not self.active:
-            return []
+            return None
         self._cache, logits = self._decode(self.params, self._cache,
                                            self._last_tokens)
+        self.busy_steps += 1
+        return logits
+
+    def step_end(self, logits) -> List[Request]:
+        if logits is None:
+            return []
         nxt = np.asarray(jnp.argmax(
             logits[:, : self.cfg.vocab_size], axis=-1)).astype(np.int32)
         self._last_tokens = jnp.asarray(nxt[:, None])
-        self.busy_steps += 1
+        self.decoded_tokens += len(self.active)
         finished = []
         keep = []
         for i, r in enumerate(self.active):
@@ -104,6 +387,10 @@ class Endpoint:
             self.active = keep
             self._rebuild()
         return finished
+
+    def step(self) -> List[Request]:
+        """One batched decode step for every active sequence."""
+        return self.step_end(self.step_begin())
 
 
 class MultiLLMServer:
@@ -133,7 +420,7 @@ class MultiLLMServer:
         self.queue.append(req)
 
     def _inflight(self) -> int:
-        return sum(len(e.active) for e in self.endpoints)
+        return sum(e.active_count() for e in self.endpoints)
 
     def _admit_batch(self, route_features):
         take = min(self.batch_size, len(self.queue),
@@ -142,7 +429,7 @@ class MultiLLMServer:
             return
         batch = [self.queue.popleft() for _ in range(take)]
         loads = np.array([e.L for e in self.endpoints], float)
-        counts = np.array([len(e.active) for e in self.endpoints], float)
+        counts = np.array([e.active_count() for e in self.endpoints], float)
         t0 = time.perf_counter()
         # the same admission/routing path as the event-driven simulator:
         # RouteBatch arrays in, assignment out (core.scheduler.route_via_batch)
@@ -152,9 +439,19 @@ class MultiLLMServer:
         self.route_calls += 1
         for req, j in zip(batch, x):
             j = int(j)
-            if self.endpoints[j].has_capacity():
+            ep = self.endpoints[j]
+            if not getattr(ep, "can_serve", lambda r: True)(req):
+                # can NEVER fit this endpoint's fixed shapes: fail it cleanly
+                # instead of crashing the server or re-queueing forever
+                req.done = True
                 req.endpoint = j
-                self.endpoints[j].admit(req)
+                req.output = []
+                req.finished = time.perf_counter()
+                self.completed.append(req)
+                continue
+            if ep.has_capacity():
+                req.endpoint = j
+                ep.admit(req)
             else:  # paper's queueing: wait for capacity
                 self.queue.appendleft(req)
 
@@ -179,10 +476,13 @@ class MultiLLMServer:
         steps = 0
         while (self.queue or self._inflight()) and steps < max_steps:
             self._admit_batch(route_features)
+            # dispatch every endpoint's chunk before blocking on any result:
+            # jax async dispatch overlaps the whole pool's decode work
+            pending = [(e, e.step_begin()) for e in self.endpoints]
             progressed = False
-            for e in self.endpoints:
-                done = e.step()
-                progressed = progressed or bool(done) or bool(e.active)
+            for e, p in pending:
+                done = e.step_end(p)
+                progressed = progressed or bool(done) or bool(e.active_count())
                 self.completed.extend(done)
                 self._fold_buf.extend(done)
             steps += 1
