@@ -1,0 +1,177 @@
+"""Streaming-control-plane benchmark (ISSUE 5) — writes
+``BENCH_streaming.json`` at the repo root.
+
+The routing-plane regret experiment: a Poisson (and bursty/MMPP) stream of
+queries with a *binding* global budget is routed window-by-window through
+the persistent dual controller (``DualSolver.route_window``: warm-started
+multipliers + cumulative budget ledger) and compared against
+
+- ``offline``  — the clairvoyant one-shot solve over the whole stream
+  (upper bound: it sees every query at t=0),
+- ``cold``     — the same windows with multipliers re-zeroed per window
+  (the ledger is kept, so the comparison isolates the warm start),
+- ``greedy``   — the paper's ``batch_size=1`` strawman: one query per
+  window, cold multipliers (per-query Lagrangian degenerates to greedy).
+
+Asserted (the ISSUE-5 acceptance criteria):
+- warm SR within 2% of the offline clairvoyant SR, never over budget;
+- warm strictly beats the bs=1 greedy SR;
+- warm uses no more total dual iterations than cold-per-window (the
+  early-exit banks the warm start as wall-clock).
+
+``STREAMING_BENCH_SMOKE=1`` shrinks to N=1k / Poisson-only for CI.
+
+  PYTHONPATH=src python -m benchmarks.run --only streaming
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from .common import emit
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_streaming.json")
+SMOKE = os.environ.get("STREAMING_BENCH_SMOKE", "0") == "1"
+
+SIZES = (1000,) if SMOKE else (1000, 16384)
+KINDS = ("poisson",) if SMOKE else ("poisson", "bursty")
+ITERS = 150
+LR = 3.0
+STALL = 0.01
+WINDOW_ARRIVALS = 64   # target arrivals per routing window (width = 64/rate):
+#                        bounded routing latency at any traffic level, and
+#                        the window-size regime where warm-starting pays
+#                        (very large windows are easy enough that a cold
+#                        conditioned solve already sits at the detection
+#                        floor of the early exit)
+
+
+def _instance(n: int, seed: int = 0):
+    """Clairvoyant matrices (predictions == truth) isolate control-plane
+    regret from prediction error: true $ costs and 0/1 correctness."""
+    from repro.data.qaserve import generate
+    ds = generate(n=n, seed=seed)
+    cost = ds.cost_matrix().astype(np.float32)
+    qual = ds.correct.astype(np.float32)
+    return cost, qual, ds.m
+
+
+def _pad_pow2(a: np.ndarray, n_true: int) -> np.ndarray:
+    """Pad a window to the next power of two with neutral rows (zero cost,
+    zero quality) so the per-window jit compiles O(log) shapes instead of
+    one per distinct window size.  Budget mode: pad rows spend $0 and the
+    generous workload cap absorbs their argmin picks."""
+    n = 1 << (max(n_true, 1) - 1).bit_length()
+    if n == n_true:
+        return a
+    return np.concatenate([a, np.zeros((n - n_true,) + a.shape[1:],
+                                       a.dtype)])
+
+
+def _run_stream(solver, cost, qual, B, loads, slices, *, warm: bool):
+    """Route the windows; returns (assignment, total iters, wall seconds)."""
+    import jax
+    import jax.numpy as jnp
+    n_total = cost.shape[0]
+    m = cost.shape[1]
+    state = None
+    x_all = np.empty(n_total, int)
+    iters = 0
+    t0 = time.perf_counter()
+    routed = 0
+    for idx in slices:
+        nw = len(idx)
+        st = state
+        if not warm and state is not None:
+            st = state._replace(lam=jnp.zeros(()), lam_load=jnp.zeros((m,)),
+                                steps=jnp.zeros(()))
+        share = nw / max(n_total - routed, nw)
+        x, info, state = solver.route_window(
+            _pad_pow2(cost[idx], nw), _pad_pow2(qual[idx], nw),
+            B, loads, st, share=share)
+        x_all[idx] = np.asarray(x)[:nw]
+        iters += int(info.iters_run)
+        routed += nw
+    jax.block_until_ready(state.lam)
+    return x_all, iters, time.perf_counter() - t0
+
+
+def run():
+    import jax
+    from repro.core.optimizer import DualSolver
+    from repro.data import arrivals
+
+    results = []
+    for n in SIZES:
+        cost, qual, m = _instance(n)
+        loads = np.full(m, float(2 * n))       # workload slack: isolate budget
+        c_min = cost.min(1).sum()
+        c_best = cost[np.arange(n), qual.argmax(1)].sum()
+        B = float(c_min + 0.4 * (c_best - c_min))   # binding
+
+        offline = DualSolver("budget", iters=2 * ITERS, lr_constraint=LR,
+                             norm_grad=True)
+        x_off, _ = offline.route_arrays(cost, qual, B, loads)
+        x_off = np.asarray(x_off)
+        sr_off = float(qual[np.arange(n), x_off].mean())
+        cost_off = float(cost[np.arange(n), x_off].sum())
+
+        solver = DualSolver("budget", iters=ITERS, lr_constraint=LR,
+                            stall_tol=STALL, norm_grad=True)
+        for kind in KINDS:
+            rate = n / 60.0                    # ~60s of traffic
+            times = arrivals.make(kind, n, rate=rate, seed=1)
+            slices = list(arrivals.window_slices(times,
+                                                 WINDOW_ARRIVALS / rate))
+            # greedy strawman: one query per window, cold multipliers
+            g_slices = [np.array([i]) for i in range(n)]
+
+            runs = {}
+            for name, sl, warm in (("warm", slices, True),
+                                   ("cold", slices, False),
+                                   ("greedy", g_slices, False)):
+                _run_stream(solver, cost, qual, B, loads, sl, warm=warm)
+                x, iters, wall = _run_stream(solver, cost, qual, B, loads,
+                                             sl, warm=warm)
+                runs[name] = {
+                    "sr": float(qual[np.arange(n), x].mean()),
+                    "cost": float(cost[np.arange(n), x].sum()),
+                    "iters": iters,
+                    "wall_s": wall,
+                    "windows": len(sl),
+                }
+                emit(f"streaming_n{n}_{kind}_{name}",
+                     wall * 1e6 / max(len(sl), 1),
+                     f"SR={runs[name]['sr']:.4f};iters={iters};"
+                     f"windows={len(sl)}")
+
+            w, c, g = runs["warm"], runs["cold"], runs["greedy"]
+            row = {
+                "n": n, "arrival": kind, "budget": B,
+                "offline_sr": sr_off, "offline_cost": cost_off,
+                **{f"{k}_{f}": v[f] for k, v in runs.items()
+                   for f in ("sr", "cost", "iters", "wall_s", "windows")},
+                "warm_sr_vs_offline": w["sr"] / max(sr_off, 1e-9),
+                "warm_vs_cold_iter_ratio": w["iters"] / max(c["iters"], 1),
+            }
+            results.append(row)
+            # --- ISSUE-5 acceptance criteria ---
+            # (the 2%-of-offline bound is the Poisson criterion; bursty
+            # MMPP windows collapse to 1-2 queries in quiet phases, which
+            # caps how much pooling any online controller can do)
+            assert w["cost"] <= B * 1.0 + 1e-6, row
+            assert w["sr"] >= (0.98 if kind == "poisson" else 0.95) * sr_off, row
+            assert w["sr"] > g["sr"], row
+            assert w["iters"] <= c["iters"], row
+
+    payload = {"backend": jax.default_backend(), "smoke": SMOKE,
+               "iters": ITERS, "lr": LR, "stall_tol": STALL,
+               "window_arrivals": WINDOW_ARRIVALS, "streams": results}
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    emit("streaming_json", 0.0, OUT_PATH)

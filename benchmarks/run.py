@@ -25,6 +25,7 @@ MODULES = [
     ("kernels", "benchmarks.bench_kernels"),
     ("routing", "benchmarks.bench_routing"),   # writes BENCH_routing.json
     ("retrieval", "benchmarks.bench_retrieval"),  # writes BENCH_retrieval.json
+    ("streaming", "benchmarks.bench_streaming"),  # writes BENCH_streaming.json
     ("roofline", "benchmarks.bench_roofline"),
 ]
 

@@ -2,9 +2,13 @@
 requests behind the ECCOS/OmniRouter (the paper-kind e2e deliverable).
 
   PYTHONPATH=src python examples/serve_multillm.py [--requests 24]
+  PYTHONPATH=src python examples/serve_multillm.py --arrival poisson --stream
 
 Real zoo models (reduced configs) decode real tokens; routing, admission
 control, concurrency limits and cost accounting run exactly as at scale.
+Request tokens are remapped into the pool's model vocab via the shared
+``tokenizer.encode_for_config`` helper (no hardcoded vocab sizes at call
+sites), and ``--arrival``/``--stream`` drive the streaming control plane.
 """
 from repro.launch.serve import main
 

@@ -1,11 +1,15 @@
 # ECCOS/OmniRouter core: the prediction plane (trained + retrieval + hybrid
-# predictors over one device contract), unified Lagrangian-dual solver,
-# serving scheduler, baselines.
+# predictors over one device contract), unified Lagrangian-dual solver with
+# the streaming DualState contract, the shared control loop, serving
+# scheduler, baselines.
 from .baselines import (BalanceAware, Oracle, PerceptionOnly, Policy,  # noqa: F401
                         RandomPolicy, RouteBatch, S3Cost)
+from .control import (AdmissionRule, ControlLoop, FoldBuffer,  # noqa: F401
+                      StreamController)
 from .features import featurize, featurize_tokens, projection  # noqa: F401
 from .hybrid import HybridConfig, HybridPredictor  # noqa: F401
-from .optimizer import (DualSolver, SolveInfo, brute_force,  # noqa: F401
+from .optimizer import (DualSolver, DualState, SolveInfo,  # noqa: F401
+                        brute_force, fold_threshold, init_dual_state,
                         primal_polish, repair_workload, solve_assignment,
                         solve_budget)
 from .predictor import PredictorConfig, TrainedPredictor  # noqa: F401

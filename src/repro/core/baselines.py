@@ -69,6 +69,16 @@ class Policy:
         """Assign each query in the batch to a pool model: (N,) int."""
         raise NotImplementedError
 
+    def route_window(self, batch: RouteBatch, state, *, share: float = 1.0,
+                     rng=None):
+        """Streaming contract: route one arrival window, threading the
+        stream state (an :class:`repro.core.optimizer.DualState` for the
+        dual controller).  Stateless policies — every baseline — ignore the
+        state and ``share`` (this window's fraction of the remaining
+        horizon) and just delegate to :meth:`route`; ``OmniRouter``
+        overrides this with the warm-started windowed solver."""
+        return self.route(batch, rng=rng), state
+
 
 def _capacity_greedy(pref_costs: np.ndarray, loads, counts, rng) -> np.ndarray:
     """Assign each query to its cheapest model with remaining capacity."""

@@ -1,0 +1,278 @@
+"""Streaming dual control plane (ISSUE 5): the ONE admission / dispatch /
+completion loop shared by the event-driven simulator
+(``repro.core.scheduler.run_serving``) and the real serving engine
+(``repro.serving.engine.MultiLLMServer``).
+
+Before this module, both drivers carried their own copy of the paper's
+§4.2 capacity rule (``batch_size or cap_total // 2`` / ``max_inflight``),
+their own admission-then-advance loop, and their own fold-back buffering —
+and both released every query at t=0.  Now:
+
+- :class:`AdmissionRule` is the single home of the capacity rule.
+- :class:`StreamController` owns the routing side of the stream: it carries
+  the :class:`~repro.core.optimizer.DualState` across windows (warm-started
+  multipliers + the cumulative budget/α ledger), computes each window's
+  share of the remaining horizon, and threads the state through
+  ``Policy.route_window``.  With ``stream=False`` it degrades to the
+  stateless one-shot ``Policy.route`` (the pre-streaming behavior).
+- :class:`FoldBuffer` is the shared buffered fold-back of completions into
+  the policy's predictor store.
+- :class:`ControlLoop` drives an *executor* (the simulator's event queue or
+  the engine's endpoint pool) through release-arrivals → admit-window →
+  advance, so "streaming" means queries arriving over time with the live
+  fleet state feeding the workload constraint — not ``batch_size=1``.
+
+The executor duck-type:
+
+    now() -> float                     stream clock (sim seconds / steps)
+    loads() / counts() -> (M,) arrays  per-model capacity and in-flight
+    dispatch(items, x) -> rejected     execute one routed window; return the
+                                       items that found no capacity
+    advance(wake_at) -> (done, bool)   move the clock one event/step; return
+                                       completed items + progress flag.
+                                       ``wake_at`` is the next time anything
+                                       new can happen (arrival / window
+                                       deadline) for idle clock jumps
+    tick()                             post-event hook (hedging)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from .baselines import Policy
+from .optimizer import DualState
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionRule:
+    """The paper §4.2 capacity rule, deduplicated out of the simulator and
+    the engine: batch size and in-flight cap both default to half the
+    pool's total concurrency."""
+
+    batch_size: int = 0      # 0 -> cap_total // 2
+    max_inflight: int = 0    # 0 -> cap_total // 2
+
+    def resolve(self, cap_total: int) -> "AdmissionRule":
+        half = max(1, int(cap_total) // 2)
+        return AdmissionRule(self.batch_size or half,
+                             self.max_inflight or half)
+
+    def take(self, queued: int, inflight: int) -> int:
+        """How many queries the next routing window may admit."""
+        return max(0, min(self.batch_size, queued,
+                          self.max_inflight - inflight))
+
+
+class StreamController:
+    """Routing side of the stream: persistent dual state + horizon shares.
+
+    One controller lives for the whole stream; each routed window updates
+    ``state`` (multipliers + cumulative ledger) and the iteration/window
+    counters used by the benchmarks.  ``horizon`` is the expected total
+    stream length — window k's budget share is ``n_k / remaining``, so a
+    stationary stream spreads the global budget evenly and under-spend
+    rolls forward.
+    """
+
+    def __init__(self, policy: Policy, *, horizon: int = 0,
+                 stream: bool = True, rng=None):
+        self.policy = policy
+        self.stream = stream
+        self.horizon = int(horizon)
+        self.rng = rng
+        self.state: Optional[DualState] = None
+        self.routed = 0
+        self.windows = 0
+        self.route_seconds = 0.0
+        self._iters0 = int(getattr(policy, "dual_iters", 0))
+
+    def route(self, ds_like, loads, counts) -> np.ndarray:
+        """Build the RouteBatch from the admitted queries + LIVE fleet
+        state and route it — the one admission/routing path shared by the
+        simulator and the engine.
+
+        Known limitation (inherited from the one-shot ``route`` path): the
+        router's fused jit compiles once per distinct window SIZE, so
+        irregular window sizes pay compile time on first sight.
+        ``benchmarks/bench_streaming.py`` pads windows to powers of two;
+        doing the same here needs mask-aware ledger accounting in
+        ``route_window`` (quality-mode padding rows would drag the window
+        mean) — see the ROADMAP open item.
+
+        Ledger caveat: ``route_window`` charges the ledger for every query
+        it ROUTES; a query the executor then rejects (no capacity) and
+        re-routes later would be charged twice.  This is unreachable for
+        the dual controller itself — it routes against ``batch.available``
+        and ``repair_workload`` enforces it exactly — but a custom
+        stateful policy that over-commits capacity would drift."""
+        t0 = time.perf_counter()
+        if self.stream:
+            batch = ds_like.route_batch(
+                np.asarray(loads, float), counts,
+                with_truth=getattr(self.policy, "needs_truth", False))
+            n_rem = max(self.horizon - self.routed, batch.n)
+            x, self.state = self.policy.route_window(
+                batch, self.state, share=batch.n / n_rem, rng=self.rng)
+            n_routed = batch.n
+        else:
+            from .scheduler import route_via_batch
+            x = route_via_batch(self.policy, ds_like, loads, counts,
+                                rng=self.rng)
+            n_routed = len(x)
+        self.route_seconds += time.perf_counter() - t0
+        self.routed += n_routed
+        self.windows += 1
+        return np.asarray(x).astype(int)
+
+    @property
+    def dual_iters(self) -> int:
+        """Dual iterations run on THIS stream (policies accumulate across
+        their lifetime; the baseline was captured at construction)."""
+        return int(getattr(self.policy, "dual_iters", 0)) - self._iters0
+
+
+class FoldBuffer:
+    """Buffered online fold-back of completions into the policy's store
+    (``fold_completions``), shared by both drivers.  ``features`` maps a
+    list of completed items to a dataset-like with ``queries`` /
+    ``correct`` / ``out_len`` (the same producer used for admission)."""
+
+    def __init__(self, policy: Policy, features: Callable, *,
+                 enabled: bool = False, chunk: int = 64):
+        self.policy = policy
+        self.features = features
+        self.enabled = enabled
+        self.chunk = max(1, chunk)
+        self.buf: List = []
+        self.folded = 0
+        self.fold_seconds = 0.0
+
+    def add(self, items: Sequence):
+        if self.enabled:
+            self.buf.extend(items)
+
+    def flush(self, force: bool = False):
+        if not self.enabled or not self.buf:
+            return
+        if not force and len(self.buf) < self.chunk:
+            return
+        from .scheduler import fold_completions
+        t0 = time.perf_counter()
+        if fold_completions(self.policy, self.features(self.buf),
+                            np.arange(len(self.buf))):
+            self.folded += len(self.buf)
+        self.fold_seconds += time.perf_counter() - t0
+        self.buf.clear()
+
+
+class ControlLoop:
+    """The shared admit→advance loop.
+
+    ``items`` are opaque to the loop (the simulator uses query indices, the
+    engine uses Requests); ``arrival_times`` releases them into the ready
+    queue as the executor's clock passes each time (None = all at t=0, the
+    pre-streaming behavior).  ``window`` > 0 rate-limits routing windows:
+    a window fires when at least ``window`` clock units have passed since
+    the last one OR a full batch has accumulated, so light traffic batches
+    up instead of degenerating to per-query routing.
+
+    ``drain_admissions`` mirrors the drivers' historical cadence: the
+    event-driven simulator admits back-to-back windows while capacity
+    lasts before processing the next completion; the engine interleaves
+    one admission per decode step.
+    """
+
+    def __init__(self, *, executor, controller: StreamController,
+                 rule: AdmissionRule, items: Sequence,
+                 features: Callable, fold: FoldBuffer,
+                 arrival_times: Optional[np.ndarray] = None,
+                 window: float = 0.0, drain_admissions: bool = True,
+                 requeue_front: bool = False):
+        self.executor = executor
+        self.controller = controller
+        self.rule = rule
+        self.features = features
+        self.fold = fold
+        self.window = float(window)
+        self.drain_admissions = drain_admissions
+        self.requeue_front = requeue_front
+        items = list(items)
+        if arrival_times is None:
+            arrival_times = np.zeros(len(items))
+        order = np.argsort(arrival_times, kind="stable")
+        self.pending = deque((float(arrival_times[i]), items[i])
+                             for i in order)
+        self.ready: deque = deque()
+        self._next_window = -np.inf
+
+    # -- stream bookkeeping ----------------------------------------------------
+    def _release_arrivals(self):
+        now = self.executor.now()
+        while self.pending and self.pending[0][0] <= now + 1e-9:
+            self.ready.append(self.pending.popleft()[1])
+
+    def _wake_at(self) -> Optional[float]:
+        """Next clock value at which something new can happen while the
+        executor is otherwise idle: an arrival, or the window deadline.
+        Only STRICTLY FUTURE times count — a deadline already passed must
+        not short-circuit the executor's own event processing (that would
+        spin the loop without ever advancing)."""
+        now = self.executor.now()
+        wake = self.pending[0][0] if self.pending else None
+        if (self.ready and self.window > 0 and self._next_window > now
+                and (wake is None or self._next_window < wake)):
+            wake = self._next_window
+        return wake
+
+    # -- one admission attempt -------------------------------------------------
+    def _try_admit(self) -> bool:
+        ex = self.executor
+        if not self.ready:
+            return False
+        counts = np.asarray(ex.counts())
+        loads = np.asarray(ex.loads())
+        if not np.any(counts < loads):
+            return False
+        if (self.window > 0 and ex.now() < self._next_window
+                and len(self.ready) < self.rule.batch_size):
+            return False    # wait for the window timer (or a full batch)
+        take = self.rule.take(len(self.ready), int(counts.sum()))
+        if take <= 0:
+            return False
+        batch = [self.ready.popleft() for _ in range(take)]
+        x = self.controller.route(self.features(batch), loads, counts)
+        rejected = ex.dispatch(batch, x)
+        for item in (reversed(rejected) if self.requeue_front else rejected):
+            if self.requeue_front:
+                self.ready.appendleft(item)
+            else:
+                self.ready.append(item)
+        self._next_window = ex.now() + self.window
+        ex.tick()
+        return True
+
+    # -- the loop --------------------------------------------------------------
+    def run(self):
+        ex = self.executor
+        self._release_arrivals()
+        while self.ready or self.pending or ex.counts().sum() > 0:
+            if getattr(ex, "stopped", False):
+                break               # executor hit its hard step budget
+            admitted = self._try_admit()
+            if admitted and self.drain_admissions:
+                continue
+            done, progressed = ex.advance(self._wake_at())
+            if done:
+                self.fold.add(done)
+                self.fold.flush()
+            ex.tick()
+            self._release_arrivals()
+            if not progressed and not admitted:
+                break               # deadlocked or out of steps: bail
+        self.fold.flush(force=True)
+        return self

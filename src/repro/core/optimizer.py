@@ -24,6 +24,17 @@ vectorized JAX — jit-compiled ``lax.while_loop``s with no Python-level
 per-query loops, so the whole route() pipeline stays on device.  NumPy
 reference implementations live in ``repro.kernels.lagrangian_assign.ref`` as
 test oracles.
+
+Streaming (ISSUE 5): the solver is no longer one-shot only.  A
+:class:`DualState` carries the multipliers and the cumulative constraint
+ledger (budget spent, realized-quality deficit) across arrival windows;
+``route_window`` folds the ledger into each window's *effective* threshold
+(remaining budget × horizon share in budget mode, α corrected by the
+accumulated deficit in quality mode), warm-starts the dual ascent from the
+previous window's multipliers, and returns the updated state.  Warm-started
+windows sit near the dual optimum, so the ascent stalls almost immediately —
+``stall_tol`` turns that into an early exit and ``SolveInfo.iters_run``
+records how many iterations actually ran.
 """
 from __future__ import annotations
 
@@ -46,6 +57,53 @@ class SolveInfo(NamedTuple):
     quality: jax.Array    # mean predicted quality of the returned assignment
     counts: jax.Array     # (M,) per-model counts of the returned assignment
     objective: jax.Array  # mode objective of returned x (cost | -Σ quality)
+    iters_run: jax.Array  # int32 — dual iterations actually run (early exit)
+
+
+class DualState(NamedTuple):
+    """Streaming dual-controller state carried across arrival windows.
+
+    A plain pytree of arrays, so it round-trips through ``jax.jit``
+    unchanged: window k+1's solve starts from window k's multipliers, and
+    the scalar ledger tracks the *cumulative* constraint position of the
+    whole stream (not re-derived per batch).
+    """
+
+    lam: jax.Array           # () carried constraint multiplier (λ1 / µ)
+    lam_load: jax.Array      # (M,) carried workload multipliers λ2
+    budget_spent: jax.Array  # () cumulative $ routed so far (both modes)
+    sr_deficit: jax.Array    # () cumulative Σ(α − q_chosen); >0 ⇒ behind α
+    steps: jax.Array         # () cumulative dual iterations on this stream —
+    #                          continues the 1/√t step schedule across
+    #                          windows (restarting it at 1 would kick the
+    #                          warm multipliers away from the optimum and
+    #                          forfeit the warm-start iteration savings)
+
+
+def init_dual_state(m: int) -> DualState:
+    """Fresh stream state: zero multipliers, empty ledger."""
+    return DualState(lam=jnp.zeros(()), lam_load=jnp.zeros((m,)),
+                     budget_spent=jnp.zeros(()), sr_deficit=jnp.zeros(()),
+                     steps=jnp.zeros(()))
+
+
+def fold_threshold(mode: str, threshold, state: Optional[DualState], n: int,
+                   share=1.0):
+    """This window's *effective* threshold given the stream ledger.
+
+    Budget mode: spend ``share`` of the remaining global budget (share is
+    the window's fraction of the remaining horizon, so a stationary stream
+    spreads the budget evenly and any under-spend rolls forward).  Quality
+    mode: raise/lower α by the realized per-query deficit so the stream's
+    cumulative mean — not each window in isolation — meets the constraint.
+    """
+    threshold = jnp.asarray(threshold, jnp.float32)
+    if state is None:
+        return threshold
+    if mode == "budget":
+        remaining = jnp.maximum(threshold - state.budget_spent, 0.0)
+        return remaining * jnp.asarray(share, jnp.float32)
+    return jnp.clip(threshold + state.sr_deficit / n, 0.0, 1.0)
 
 
 def _mode_params(cost, quality, threshold, lr_con, *, budget_mode: bool):
@@ -56,27 +114,86 @@ def _mode_params(cost, quality, threshold, lr_con, *, budget_mode: bool):
     return cost, -quality / n, -threshold, lr_con * n
 
 
+def _normalize_problem(a_mat, b_mat, t_eff, lr_con, lr_load, lam0, lam20,
+                       loads):
+    """Scale-free conditioning shared by the jnp reference and the fused
+    kernel wrapper (they MUST stay bit-identical — warm-parity tests assert
+    fused == reference exactly): both unified matrices are normalized to
+    unit mean magnitude, the λ step becomes lr·(relative residual), the λ2
+    step is conditioned on the loads scale, and the warm-start multipliers
+    convert into normalized units (λ̂ = λ·b̄/ā, λ̂2 = λ2/ā).  Returns the
+    normalized problem plus (ā, b̄) for converting the emitted multipliers
+    back to true units.
+    """
+    a_bar = jnp.mean(jnp.abs(a_mat)) + jnp.float32(1e-30)
+    b_bar = jnp.mean(jnp.abs(b_mat)) + jnp.float32(1e-30)
+    a_mat = a_mat / a_bar
+    b_mat = b_mat / b_bar
+    t_eff = t_eff / b_bar
+    lr_eff = lr_con / (1.0 + jnp.abs(t_eff))
+    lr_load_eff = lr_load / (1.0 + jnp.mean(loads))
+    lam0 = lam0 * b_bar / a_bar
+    lam20 = lam20 / a_bar
+    return a_mat, b_mat, t_eff, lr_eff, lr_load_eff, lam0, lam20, a_bar, b_bar
+
+
 def _chosen_sum(mat, x):
     return jnp.take_along_axis(mat, x[:, None], axis=1).sum()
 
 
-@partial(jax.jit, static_argnames=("mode", "iters"))
-def _solve_ref(cost, quality, threshold, loads, *, mode: str, iters: int,
-               lr_con: float, lr_load: float):
-    """jnp reference dual ascent — the oracle for the fused Pallas path."""
+@partial(jax.jit, static_argnames=("mode", "iters", "patience", "norm_grad"))
+def _solve_ref(cost, quality, threshold, loads, lam0=0.0, lam20=None,
+               stall_tol=0.0, step0=0.0, *, mode: str, iters: int,
+               lr_con: float, lr_load: float, patience: int = 3,
+               norm_grad: bool = False):
+    """jnp reference dual ascent — the oracle for the fused Pallas path.
+
+    ``lam0``/``lam20`` warm-start the multipliers (a streaming window starts
+    from the previous window's dual point) and ``step0`` continues the
+    diminishing step schedule where the stream left off (1/√(1+step0+t)).
+    When ``stall_tol`` > 0 the while_loop exits once a feasible iterate is
+    banked and ``patience`` iterations (cumulative) have either stalled the
+    multipliers or sat on the constraint boundary — warm-started windows bank
+    most of their wall-clock here.  ``stall_tol=0`` with ``step0=0``
+    reproduces the fixed-``iters`` trajectory exactly.
+    """
     n, m = cost.shape
     cost = cost.astype(jnp.float32)
     quality = quality.astype(jnp.float32)
     loads = loads.astype(jnp.float32)
+    stall_tol = jnp.asarray(stall_tol, jnp.float32)
+    step0 = jnp.asarray(step0, jnp.float32)
     a_mat, b_mat, t_eff, lr_eff = _mode_params(
         cost, quality, threshold, lr_con, budget_mode=(mode == "budget"))
+    # norm_grad: scale-free conditioning — BOTH unified matrices are
+    # normalized to unit mean magnitude and the step uses the residual
+    # relative to the threshold, so one O(1) lr works across window sizes,
+    # modes and $ scales.  Raw units otherwise put the dual optimum at
+    # λ* ~ Ā-scale/B̄-scale (1e4 when one side is $/query ~1e-4) while the
+    # subgradient is in sum units, so the ascent either limit-cycles or
+    # never arrives.  Streaming opts in; the legacy one-shot trajectory is
+    # untouched by default.  The emitted λ is converted back to true units
+    # (λ = λ̂·ā/b̄) for repair and DualState.
+    a_bar = b_bar = jnp.float32(1.0)
+    lam0 = jnp.asarray(lam0, jnp.float32)
+    lam20 = jnp.zeros((m,)) if lam20 is None else jnp.asarray(lam20)
+    lam20 = lam20.astype(jnp.float32).reshape((m,))
+    lr_load_eff = lr_load
+    if norm_grad:
+        (a_mat, b_mat, t_eff, lr_eff, lr_load_eff, lam0, lam20,
+         a_bar, b_bar) = _normalize_problem(
+            a_mat, b_mat, t_eff, lr_con, lr_load, lam0, lam20, loads)
 
     def assign(lam, lam2):
         scores = a_mat + lam * b_mat + lam2[None, :]
         return jnp.argmin(scores, axis=1).astype(jnp.int32)
 
-    def body(t, carry):
-        lam, lam2, best_a, best_x, found = carry
+    def cond(carry):
+        t, _, _, _, _, _, stall = carry
+        return (t < iters) & (stall < patience)
+
+    def body(carry):
+        t, lam, lam2, best_a, best_x, found = carry[:6]
         x = assign(lam, lam2)
         asum = _chosen_sum(a_mat, x)
         bsum = _chosen_sum(b_mat, x)
@@ -87,22 +204,41 @@ def _solve_ref(cost, quality, threshold, loads, *, mode: str, iters: int,
         best_x = jnp.where(better, x, best_x)
         found = found | feasible
         # diminishing steps for subgradient convergence
-        step = 1.0 / jnp.sqrt(1.0 + t.astype(jnp.float32))
-        lam = jnp.maximum(lam + lr_eff * step * (bsum - t_eff), 0.0)
-        lam2 = jnp.maximum(lam2 + lr_load * step * (cnt - loads), 0.0)
-        return lam, lam2, best_a, best_x, found
+        step = 1.0 / jnp.sqrt(1.0 + step0 + t.astype(jnp.float32))
+        lam_new = jnp.maximum(lam + lr_eff * step * (bsum - t_eff), 0.0)
+        lam2_new = jnp.maximum(
+            lam2 + lr_load_eff * step * (cnt - loads), 0.0)
+        # stall signal: the multipliers stopped moving (relative), OR the
+        # iterate sits on the constraint boundary (small relative residual)
+        # — either way further ascent has nothing left to gain
+        delta = jnp.abs(lam_new - lam) + jnp.abs(lam2_new - lam2).sum()
+        denom = 1.0 + jnp.abs(lam_new) + jnp.abs(lam2_new).sum()
+        resid = jnp.abs(bsum - t_eff) / (1.0 + jnp.abs(t_eff))
+        stalled = found & ((delta < stall_tol * denom)
+                           | (resid < stall_tol))
+        # cumulative (not consecutive) count: an oscillating dual only
+        # touches the boundary once per cycle, so a reset would never let
+        # the counter reach `patience`
+        stall = carry[6] + stalled.astype(jnp.int32)
+        return t + 1, lam_new, lam2_new, best_a, best_x, found, stall
 
-    init = (jnp.zeros(()), jnp.zeros((m,)), jnp.asarray(jnp.inf),
-            jnp.zeros((n,), jnp.int32), jnp.asarray(False))
-    lam, lam2, best_a, best_x, found = jax.lax.fori_loop(0, iters, body, init)
+    init = (jnp.asarray(0, jnp.int32),
+            jnp.asarray(lam0, jnp.float32).reshape(()),
+            lam20,
+            jnp.asarray(jnp.inf), jnp.zeros((n,), jnp.int32),
+            jnp.asarray(False), jnp.asarray(0, jnp.int32))
+    t_run, lam, lam2, best_a, best_x, found, _ = jax.lax.while_loop(
+        cond, body, init)
     x_last = assign(lam, lam2)
     x = jnp.where(found, best_x, x_last)
     info = SolveInfo(
-        lam=lam, lam_load=lam2, feasible=found,
+        lam=lam * a_bar / b_bar, lam_load=lam2 * a_bar, feasible=found,
         cost=_chosen_sum(cost, x), quality=jnp.take_along_axis(
             quality, x[:, None], axis=1).sum() / n,
         counts=jnp.zeros((m,), jnp.float32).at[x].add(1.0),
-        objective=jnp.where(found, best_a, _chosen_sum(a_mat, x_last)),
+        objective=jnp.where(found, best_a,
+                            _chosen_sum(a_mat, x_last)) * a_bar,
+        iters_run=t_run,
     )
     return x, info
 
@@ -121,25 +257,47 @@ class DualSolver:
     lr_workload: float = 0.5       # α2 in Eq. 10
     use_kernel: bool = False       # fused Pallas dual ascent (1 launch/solve)
     block_q: int = 256             # query block for the fused kernel
+    stall_tol: float = 0.0         # >0: early-exit on multiplier stall
+    stall_patience: int = 3        # cumulative stalled iters before exit
+    norm_grad: bool = False        # scale-free subgradient (streaming)
 
     def __post_init__(self):
         if self.mode not in ("quality", "budget"):
             raise ValueError(f"unknown solver mode: {self.mode!r}")
 
-    def solve(self, cost, quality, threshold, loads
+    def solve(self, cost, quality, threshold, loads,
+              state: Optional[DualState] = None
               ) -> Tuple[jax.Array, SolveInfo]:
-        """cost/quality (N, M) -> (assignment (N,), SolveInfo)."""
+        """cost/quality (N, M) -> (assignment (N,), SolveInfo).
+
+        ``state`` warm-starts the dual ascent from a previous window's
+        multipliers (``threshold`` is used as given — ledger folding is
+        ``route_window``'s job)."""
+        m = cost.shape[1]
+        lam0 = jnp.zeros(()) if state is None else state.lam
+        lam20 = jnp.zeros((m,)) if state is None else state.lam_load
+        # continue the stream's step schedule, but keep a step floor
+        # (~1/20) so a drifting workload can still move the multipliers
+        step0 = (jnp.zeros(()) if state is None
+                 else jnp.minimum(state.steps, 400.0))
         if self.use_kernel:
             from repro.kernels.lagrangian_assign.ops import solve_fused
             return solve_fused(cost, quality, threshold, loads,
                                mode=self.mode, iters=self.iters,
                                lr_con=self.lr_constraint,
-                               lr_load=self.lr_workload, bq=self.block_q)
+                               lr_load=self.lr_workload, bq=self.block_q,
+                               lam0=lam0, lam20=lam20, step0=step0,
+                               stall_tol=self.stall_tol,
+                               patience=self.stall_patience,
+                               norm_grad=self.norm_grad)
         return _solve_ref(jnp.asarray(cost), jnp.asarray(quality),
                           jnp.asarray(threshold, jnp.float32),
-                          jnp.asarray(loads), mode=self.mode,
+                          jnp.asarray(loads), lam0, lam20, self.stall_tol,
+                          step0, mode=self.mode,
                           iters=self.iters, lr_con=self.lr_constraint,
-                          lr_load=self.lr_workload)
+                          lr_load=self.lr_workload,
+                          patience=self.stall_patience,
+                          norm_grad=self.norm_grad)
 
     def solve_batch(self, cost, quality, thresholds, loads):
         """vmap over a leading batch axis: cost/quality (B, N, M),
@@ -149,8 +307,10 @@ class DualSolver:
         the fused kernel is one launch per solve and is not vmapped)."""
         loads = jnp.asarray(loads)
         in_axes = (0, 0, 0, 0 if loads.ndim == 2 else None)
-        fn = partial(_solve_ref, mode=self.mode, iters=self.iters,
-                     lr_con=self.lr_constraint, lr_load=self.lr_workload)
+        fn = partial(_solve_ref, stall_tol=self.stall_tol,
+                     mode=self.mode, iters=self.iters,
+                     lr_con=self.lr_constraint, lr_load=self.lr_workload,
+                     patience=self.stall_patience, norm_grad=self.norm_grad)
         return jax.vmap(fn, in_axes=in_axes)(
             jnp.asarray(cost), jnp.asarray(quality),
             jnp.asarray(thresholds, jnp.float32), loads)
@@ -161,16 +321,20 @@ class DualSolver:
 
         Always runs the jit reference scan (``use_kernel`` is ignored here:
         the fused kernel is one launch per solve and is not vmapped)."""
-        fn = partial(_solve_ref, mode=self.mode, iters=self.iters,
-                     lr_con=self.lr_constraint, lr_load=self.lr_workload)
+        fn = partial(_solve_ref, stall_tol=self.stall_tol,
+                     mode=self.mode, iters=self.iters,
+                     lr_con=self.lr_constraint, lr_load=self.lr_workload,
+                     patience=self.stall_patience, norm_grad=self.norm_grad)
         return jax.vmap(fn, in_axes=(None, None, 0, None))(
             jnp.asarray(cost), jnp.asarray(quality),
             jnp.asarray(thresholds, jnp.float32), jnp.asarray(loads))
 
     def route_arrays(self, cost, quality, threshold, loads,
-                     polish_threshold=None) -> Tuple[jax.Array, SolveInfo]:
+                     polish_threshold=None,
+                     state: Optional[DualState] = None
+                     ) -> Tuple[jax.Array, SolveInfo]:
         """Full device pipeline: solve -> workload repair -> primal polish."""
-        x, info = self.solve(cost, quality, threshold, loads)
+        x, info = self.solve(cost, quality, threshold, loads, state=state)
         cost = jnp.asarray(cost, jnp.float32)
         quality = jnp.asarray(quality, jnp.float32)
         loads = jnp.asarray(loads, jnp.float32)
@@ -184,6 +348,44 @@ class DualSolver:
             x = budget_polish(x, cost, quality,
                               jnp.asarray(threshold, jnp.float32), loads)
         return x, info
+
+    def route_window(self, cost, quality, threshold, loads,
+                     state: Optional[DualState] = None, *, share=1.0,
+                     polish_margin: float = 0.0
+                     ) -> Tuple[jax.Array, SolveInfo, DualState]:
+        """One streaming window: fold the cumulative ledger into this
+        window's effective threshold, warm-start the ascent from the carried
+        multipliers, repair/polish, and return the updated stream state.
+
+        ``threshold`` is the GLOBAL constraint (stream budget B, or α);
+        ``share`` is the window's fraction of the remaining horizon (budget
+        mode only).  All ops are jnp, so the whole method traces into one
+        jit (the router fuses predict→route_window into a single boundary).
+        """
+        cost = jnp.asarray(cost, jnp.float32)
+        quality = jnp.asarray(quality, jnp.float32)
+        loads = jnp.asarray(loads, jnp.float32)
+        n, m = cost.shape
+        if state is None:
+            state = init_dual_state(m)
+        threshold = jnp.asarray(threshold, jnp.float32)
+        t_eff = fold_threshold(self.mode, threshold, state, n, share)
+        if self.mode == "quality":
+            p_eff = jnp.clip(t_eff + polish_margin, 0.0, 1.0)
+        else:
+            p_eff = t_eff
+        x, info = self.route_arrays(cost, quality, t_eff, loads,
+                                    polish_threshold=p_eff, state=state)
+        # ledger update uses the FINAL (repaired + polished) assignment
+        csum = _chosen_sum(cost, x)
+        qsum = _chosen_sum(quality, x)
+        deficit = (threshold * n - qsum) if self.mode == "quality" else 0.0
+        new_state = DualState(
+            lam=info.lam, lam_load=info.lam_load,
+            budget_spent=state.budget_spent + csum,
+            sr_deficit=state.sr_deficit + deficit,
+            steps=state.steps + info.iters_run)
+        return x, info, new_state
 
 
 # --- legacy entry points: thin wrappers over the one DualSolver code path ---

@@ -13,6 +13,15 @@ retracing (the store's capacity-doubling is the only recompile trigger).
 
 Predictors without the device contract fall back to the two-call path
 (``predict_arrays`` then ``DualSolver.route_arrays``).
+
+Streaming (ISSUE 5): ``route_window`` makes the router stateful under the
+hood — it threads a :class:`~repro.core.optimizer.DualState` through a
+*streaming-tuned* solver (scale-free subgradient + stall early-exit) so
+window k+1 warm-starts from window k's multipliers and the global budget/α
+is enforced cumulatively over the stream.  The stateless ``route`` contract
+is unchanged for offline callers, and the device path fuses
+featurize→predict→window-solve into the same single jit boundary with the
+stream state passed as arrays.
 """
 from __future__ import annotations
 
@@ -27,7 +36,7 @@ import numpy as np
 from repro.data.qaserve import QAServe
 from repro.data import tokenizer
 from .baselines import Policy, RouteBatch
-from .optimizer import DualSolver
+from .optimizer import DualSolver, DualState, init_dual_state
 
 
 @dataclasses.dataclass
@@ -44,6 +53,12 @@ class RouterConfig:
     # realized SR below alpha (optimizing to the boundary of a *predicted*
     # constraint amplifies miscalibration)
     alpha_margin: float = 0.03
+    # streaming solver (route_window only): scale-free subgradient makes one
+    # O(1) lr meaningful in both modes; stall_tol banks the warm-start win
+    # as an early exit.  The offline solver above is untouched.
+    lr_stream: float = 3.0
+    stall_tol: float = 0.01
+    stall_patience: int = 3
 
 
 class OmniRouter(Policy):
@@ -60,9 +75,19 @@ class OmniRouter(Policy):
             mode=mode, iters=cfg.iters,
             lr_constraint=cfg.lr_budget if mode == "budget" else cfg.lr_quality,
             lr_workload=cfg.lr_workload, use_kernel=cfg.use_assign_kernel)
+        # streaming windows run a scale-free, early-exiting variant; the
+        # offline solver above keeps the paper's one-shot trajectory
+        self.stream_solver = DualSolver(
+            mode=mode, iters=cfg.iters, lr_constraint=cfg.lr_stream,
+            lr_workload=cfg.lr_workload, use_kernel=cfg.use_assign_kernel,
+            stall_tol=cfg.stall_tol, stall_patience=cfg.stall_patience,
+            norm_grad=True)
         self.route_seconds = 0.0    # scheduling-overhead accounting (Fig. 3)
         self.predict_seconds = 0.0
+        self.dual_iters = 0         # total streaming dual iterations run
+        self.windows = 0            # streaming windows routed
         self._fused_route = None    # jitted predict→solve, built lazily
+        self._fused_window = None   # jitted predict→window-solve (streaming)
 
     def prepare(self, train_ds: QAServe):
         return self
@@ -95,10 +120,64 @@ class OmniRouter(Policy):
 
         return jax.jit(fused)
 
+    def _build_fused_window(self):
+        predictor, solver = self.predictor, self.stream_solver
+        margin = self.cfg.alpha_margin
+
+        def fused(inputs, tokens, input_len, price_in, price_out, avail,
+                  threshold, state, share):
+            cap, _, cost = predictor.predict_device(
+                inputs, tokens, input_len, price_in, price_out)
+            return solver.route_window(cost, cap, threshold, avail, state,
+                                       share=share, polish_margin=margin)
+
+        return jax.jit(fused)
+
     def route(self, batch: RouteBatch, rng=None) -> np.ndarray:
         if hasattr(self.predictor, "predict_device"):
             return self._route_device(batch)
         return self._route_hostpredict(batch)
+
+    def route_window(self, batch: RouteBatch, state: Optional[DualState],
+                     *, share: float = 1.0, rng=None):
+        """Streaming window: predict → warm-started windowed solve, with
+        the DualState threaded through the SAME single jit boundary as the
+        one-shot path (state in, state out — no host round-trip between the
+        predictor and the solver).  Returns ``(assignment, new_state)``."""
+        if state is None:
+            state = init_dual_state(batch.m)
+        threshold = (self.cfg.budget if self.cfg.budget is not None
+                     else self.cfg.alpha)
+        if hasattr(self.predictor, "predict_device"):
+            t0 = time.perf_counter()
+            toks = jnp.asarray(tokenizer.encode_batch(
+                batch.queries, self.predictor.token_len))
+            t1 = time.perf_counter()
+            self.predict_seconds += t1 - t0
+            if self._fused_window is None:
+                self._fused_window = self._build_fused_window()
+            x, info, state = self._fused_window(
+                self.predictor.device_inputs(), toks,
+                jnp.asarray(batch.input_len, jnp.float32),
+                jnp.asarray(batch.price_in, jnp.float32),
+                jnp.asarray(batch.price_out, jnp.float32),
+                jnp.asarray(batch.available, jnp.float32),
+                jnp.asarray(threshold, jnp.float32), state,
+                jnp.asarray(share, jnp.float32))
+        else:
+            t0 = time.perf_counter()
+            cap, _, cost = self.predictor.predict_arrays(batch)
+            t1 = time.perf_counter()
+            self.predict_seconds += t1 - t0
+            x, info, state = self.stream_solver.route_window(
+                jnp.asarray(cost), jnp.asarray(cap), threshold,
+                jnp.asarray(batch.available), state, share=share,
+                polish_margin=self.cfg.alpha_margin)
+        x = np.asarray(x)
+        self.dual_iters += int(info.iters_run)
+        self.windows += 1
+        self.route_seconds += time.perf_counter() - t1
+        return x, state
 
     def _route_device(self, batch: RouteBatch) -> np.ndarray:
         """Single-jit path: tokenize on host, everything else on device."""

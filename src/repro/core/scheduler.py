@@ -1,14 +1,22 @@
-"""Serving scheduler: streaming & fixed-size batching over a multi-LLM pool
-(paper §4.2 setup), with straggler hedging for fault tolerance.
+"""Serving scheduler: an event-driven simulation of the multi-LLM pool
+(paper §4.2 setup) driven by the shared streaming control loop
+(``repro.core.control``), with straggler hedging for fault tolerance.
 
-Event-driven simulation: each endpoint j serves up to L_j concurrent jobs;
-service time of a job is out_len / tokens_per_sec_j (+ queueing). Streaming is
-batching with batch size 1 (paper's "common practice"). A unified capacity
-control caps in-flight jobs at half the total workload capacity (paper §4.2).
+Each endpoint j serves up to L_j concurrent jobs; service time of a job is
+out_len / tokens_per_sec_j (+ queueing).  Admission follows the paper's
+capacity rule (:class:`~repro.core.control.AdmissionRule`); "streaming"
+mode is batching with batch size 1 (the paper's "common practice"
+strawman).  The real streaming upgrade is the arrival process: with
+``cfg.arrival`` set, queries are released over time (Poisson / bursty /
+diurnal — ``repro.data.arrivals``) and ``cfg.streaming_dual`` routes each
+window through the *persistent* dual controller
+(``Policy.route_window``), so multipliers and the cumulative budget/α
+ledger carry across windows and the live in-flight counts feed the
+workload constraint.
 
-Routing goes through the array-based :class:`RouteBatch` contract
-(``route_via_batch``) — the same admission/routing path the real serving
-engine (``repro.serving.engine``) uses.
+Routing goes through the array-based :class:`RouteBatch` contract — the
+same admission/routing path the real serving engine
+(``repro.serving.engine``) uses, via the same :class:`ControlLoop`.
 
 Hedging fires while the straggler is still *in flight*: whenever the clock
 advances (admission or a completion), any un-hedged in-flight job whose
@@ -20,18 +28,19 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-import time
 from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.data import arrivals
 from repro.data.qaserve import QAServe
 from .baselines import Policy
+from .control import AdmissionRule, ControlLoop, FoldBuffer, StreamController
 
 
 @dataclasses.dataclass
 class SchedulerConfig:
-    mode: str = "batching"          # batching | streaming
+    mode: str = "batching"          # batching | streaming (batch size 1)
     batch_size: int = 0             # 0 -> capacity/2 (paper's rule)
     loads: int = 4                  # L per model (paper default)
     tokens_per_sec: float = 60.0    # endpoint decode speed
@@ -40,6 +49,12 @@ class SchedulerConfig:
     fold_online: bool = False       # fold completions into the policy's store
     fold_chunk: int = 64            # completions per observe() flush
     seed: int = 0
+    # --- streaming control plane (ISSUE 5) ---
+    arrival: str = "batch"          # batch | poisson | bursty | diurnal
+    arrival_rate: float = 16.0      # mean arrivals / second
+    window: float = 0.0             # min seconds between routing windows
+    streaming_dual: bool = False    # carry DualState across windows
+    horizon: int = 0                # expected stream length (0 -> ds.n)
 
 
 @dataclasses.dataclass
@@ -53,15 +68,18 @@ class ServeResult:
     per_model_correct: np.ndarray
     per_model_cost: np.ndarray
     hedged: int = 0
+    windows: int = 0                # routing windows the stream used
+    dual_iters: int = 0             # total dual iterations (streaming_dual)
 
 
 def route_via_batch(policy: Policy, ds_like, loads, counts, rng=None
                     ) -> np.ndarray:
-    """The one admission/routing path shared by the simulator and the real
-    engine: produce a RouteBatch from the admitted queries + fleet state and
-    hand it to the policy.  Ground-truth arrays are materialized only for
-    policies that declare they need them (Oracle) — a live engine has no
-    truth, and building it would inflate the measured routing overhead."""
+    """The one stateless admission/routing path: produce a RouteBatch from
+    the admitted queries + fleet state and hand it to the policy.
+    Ground-truth arrays are materialized only for policies that declare
+    they need them (Oracle) — a live engine has no truth, and building it
+    would inflate the measured routing overhead.  (The streaming
+    equivalent, with DualState carry, is ``control.StreamController``.)"""
     batch = ds_like.route_batch(np.asarray(loads, float), counts,
                                 with_truth=getattr(policy, "needs_truth",
                                                    False))
@@ -86,122 +104,136 @@ def fold_completions(policy: Policy, ds_like, idxs) -> bool:
                np.asarray(out_len)[idxs]) is not None
 
 
+class _SimExecutor:
+    """Event-driven fleet simulator behind the shared control loop: a heap
+    of completion events, per-model in-flight counts, and the hedging
+    machinery.  Items are query indices into ``ds``."""
+
+    def __init__(self, ds: QAServe, cfg: SchedulerConfig, loads: np.ndarray):
+        self.ds = ds
+        self.cfg = cfg
+        self._loads = loads
+        self._counts = np.zeros(ds.m, int)
+        self.true_service = ds.out_len / cfg.tokens_per_sec  # (N, M) secs
+        self.done_q: List = []             # (finish_time, event_id, qi, j)
+        self.cancelled = set()             # event ids whose capacity is freed
+        self.live: Dict[int, List] = {}    # qi -> [(eid, j, ft), ...]
+        self.t = 0.0
+        self.llm_secs = 0.0
+        self.hedged = 0
+        self.next_eid = 0
+        self.assign = np.full(ds.n, -1, int)
+        self.completed = np.zeros(ds.n, bool)
+        self.hedged_q = np.zeros(ds.n, bool)
+        self.service_seen: List[float] = []
+
+    # -- executor duck-type ----------------------------------------------------
+    def now(self) -> float:
+        return self.t
+
+    def loads(self) -> np.ndarray:
+        return self._loads
+
+    def counts(self) -> np.ndarray:
+        return self._counts
+
+    def dispatch(self, items, x) -> List[int]:
+        rejected = []
+        for qi, j in zip(items, x):
+            j = int(j)
+            if self._counts[j] >= self._loads[j]:
+                rejected.append(qi)     # no capacity after all -> requeue
+                continue
+            self.assign[qi] = j
+            self._dispatch(qi, j)
+        return rejected
+
+    def advance(self, wake_at):
+        if not self.done_q:
+            if wake_at is None:
+                return [], False
+            self.t = max(self.t, wake_at)   # idle: jump to the next arrival
+            return [], True
+        if wake_at is not None and wake_at < self.done_q[0][0]:
+            self.t = max(self.t, wake_at)   # arrival/window before completion
+            return [], True
+        ft, eid, qi, j = heapq.heappop(self.done_q)
+        if eid in self.cancelled:           # sibling won; capacity was freed
+            self.cancelled.discard(eid)
+            self.live[qi] = [e for e in self.live.get(qi, []) if e[0] != eid]
+            return [], True
+        self.t = max(self.t, ft)
+        self.service_seen.append(float(self.true_service[qi, j]))
+        self._counts[j] -= 1
+        self.live[qi] = [e for e in self.live.get(qi, []) if e[0] != eid]
+        if self.completed[qi]:
+            return [], True
+        self.completed[qi] = True
+        self.assign[qi] = j                 # first finisher wins (hedging)
+        for sid, sj, sft in self.live.get(qi, []):
+            self.cancelled.add(sid)         # kill the straggler copy now
+            self._counts[sj] -= 1
+            self.llm_secs -= max(sft - self.t, 0.0)  # un-charge unexecuted tail
+        self.live[qi] = []
+        return [qi], True
+
+    def tick(self):
+        self._maybe_hedge()
+
+    # -- internals -------------------------------------------------------------
+    def _dispatch(self, qi: int, j: int):
+        self._counts[j] += 1
+        dur = float(self.true_service[qi, j])
+        self.llm_secs += dur
+        heapq.heappush(self.done_q, (self.t + dur, self.next_eid, qi, j))
+        self.live.setdefault(qi, []).append((self.next_eid, j, self.t + dur))
+        self.next_eid += 1
+
+    def _maybe_hedge(self):
+        """Duplicate un-hedged in-flight stragglers (remaining time vs the
+        median service seen so far) on the least-loaded endpoint."""
+        if not self.cfg.hedge or not self.service_seen:
+            return
+        med = float(np.median(self.service_seen))
+        for ft, eid, qi, j in list(self.done_q):
+            if (eid in self.cancelled or self.completed[qi]
+                    or self.hedged_q[qi]
+                    or (ft - self.t) <= self.cfg.hedge_factor * med):
+                continue
+            if not np.any(self._counts < self._loads):
+                return
+            alt = int(np.argmax(self._loads - self._counts))
+            if alt != j and self._counts[alt] < self._loads[alt]:
+                self.hedged_q[qi] = True
+                self.hedged += 1
+                self._dispatch(qi, alt)
+
+
 def run_serving(ds: QAServe, policy: Policy, cfg: SchedulerConfig) -> ServeResult:
     rng = np.random.RandomState(cfg.seed)
     n, m = ds.n, ds.m
     loads = np.full(m, cfg.loads, int)
-    cap_total = int(loads.sum())
-    batch_size = 1 if cfg.mode == "streaming" else (
-        cfg.batch_size or max(1, cap_total // 2))
-    max_inflight = max(1, cap_total // 2)
+    rule = AdmissionRule(
+        1 if cfg.mode == "streaming" else cfg.batch_size).resolve(loads.sum())
 
-    cost_mat = ds.cost_matrix()
-    true_service = ds.out_len / cfg.tokens_per_sec   # (N, M) seconds
+    times = arrivals.make(cfg.arrival, n, rate=cfg.arrival_rate,
+                          seed=cfg.seed)
+    executor = _SimExecutor(ds, cfg, loads)
+    controller = StreamController(policy, horizon=cfg.horizon or n,
+                                  stream=cfg.streaming_dual, rng=rng)
+    fold = FoldBuffer(policy, lambda idxs: ds.subset(np.asarray(idxs, int)),
+                      enabled=cfg.fold_online, chunk=cfg.fold_chunk)
+    loop = ControlLoop(
+        executor=executor, controller=controller, rule=rule,
+        items=range(n), features=lambda idx: ds.subset(np.asarray(idx, int)),
+        fold=fold, arrival_times=times, window=cfg.window,
+        drain_admissions=True, requeue_front=False)
+    loop.run()
 
-    counts = np.zeros(m, int)          # in-flight per model
-    done_q: List = []                  # (finish_time, event_id, qi, j)
-    cancelled = set()                  # event ids whose capacity was freed
-    live: Dict[int, List] = {}         # qi -> [(event_id, j), ...] in flight
-    waiting = list(range(n))
-    t = 0.0
-    sched_secs = 0.0
-    llm_secs = 0.0
-    hedged = 0
-    next_eid = 0
-    assign = np.full(n, -1, int)
-    completed = np.zeros(n, bool)
-    hedged_q = np.zeros(n, bool)
-    service_seen: List[float] = []
-    fold_buf: List[int] = []        # completed queries awaiting store fold
-
-    def flush_fold(force: bool = False):
-        nonlocal sched_secs
-        if cfg.fold_online and fold_buf and (
-                force or len(fold_buf) >= cfg.fold_chunk):
-            t0 = time.perf_counter()
-            fold_completions(policy, ds, fold_buf)
-            sched_secs += time.perf_counter() - t0
-            fold_buf.clear()
-
-    def inflight() -> int:
-        return int(counts.sum())
-
-    def dispatch(qi: int, j: int):
-        nonlocal llm_secs, next_eid
-        counts[j] += 1
-        dur = float(true_service[qi, j])
-        llm_secs += dur
-        heapq.heappush(done_q, (t + dur, next_eid, qi, j))
-        live.setdefault(qi, []).append((next_eid, j, t + dur))
-        next_eid += 1
-
-    def maybe_hedge():
-        """Duplicate un-hedged in-flight stragglers (remaining time vs the
-        median service seen so far) on the least-loaded endpoint."""
-        nonlocal hedged
-        if not cfg.hedge or not service_seen:
-            return
-        med = float(np.median(service_seen))
-        for ft, eid, qi, j in list(done_q):
-            if (eid in cancelled or completed[qi] or hedged_q[qi]
-                    or (ft - t) <= cfg.hedge_factor * med):
-                continue
-            if not np.any(counts < loads):
-                return
-            alt = int(np.argmax(loads - counts))
-            if alt != j and counts[alt] < loads[alt]:
-                hedged_q[qi] = True
-                hedged += 1
-                dispatch(qi, alt)
-
-    while waiting or done_q:
-        # admit a batch when capacity allows
-        can_admit = (len(waiting) > 0 and inflight() < max_inflight
-                     and np.any(counts < loads))
-        if can_admit:
-            take = min(batch_size, len(waiting), max_inflight - inflight())
-            idx = waiting[:take]
-            waiting[:] = waiting[take:]
-            sub = ds.subset(np.array(idx))
-            t0 = time.perf_counter()
-            x = route_via_batch(policy, sub, loads, counts, rng=rng)
-            sched_secs += time.perf_counter() - t0
-            for qi, j in zip(idx, x):
-                j = int(j)
-                if counts[j] >= loads[j]:
-                    # no capacity after all -> requeue (paper's queueing)
-                    waiting.append(qi)
-                    continue
-                assign[qi] = j
-                dispatch(qi, j)
-            maybe_hedge()
-            continue
-        if not done_q:
-            break
-        ft, eid, qi, j = heapq.heappop(done_q)
-        if eid in cancelled:        # sibling won; capacity already freed
-            cancelled.discard(eid)
-            live[qi] = [e for e in live.get(qi, []) if e[0] != eid]
-            continue
-        t = max(t, ft)
-        service_seen.append(float(true_service[qi, j]))
-        counts[j] -= 1
-        live[qi] = [e for e in live.get(qi, []) if e[0] != eid]
-        if not completed[qi]:
-            completed[qi] = True
-            assign[qi] = j          # first finisher wins (hedge semantics)
-            fold_buf.append(qi)
-            for sid, sj, sft in live.get(qi, []):
-                cancelled.add(sid)  # kill the straggler copy now
-                counts[sj] -= 1
-                llm_secs -= max(sft - t, 0.0)   # un-charge unexecuted tail
-            live[qi] = []
-        flush_fold()
-        maybe_hedge()
-
-    flush_fold(force=True)
+    assign = executor.assign
     ok = assign >= 0
     idxs = np.flatnonzero(ok)
+    cost_mat = ds.cost_matrix()
     sr = float(ds.correct[idxs, assign[idxs]].mean()) if len(idxs) else 0.0
     total_cost = float(cost_mat[idxs, assign[idxs]].sum())
     pm_counts = np.bincount(assign[idxs], minlength=m)
@@ -213,8 +245,11 @@ def run_serving(ds: QAServe, policy: Policy, cfg: SchedulerConfig) -> ServeResul
             pm_correct[j] = ds.correct[idxs[mask], j].mean()
             pm_cost[j] = cost_mat[idxs[mask], j].sum()
     return ServeResult(
-        success_rate=sr, cost=total_cost, makespan=t,
-        scheduling_seconds=sched_secs, llm_seconds=llm_secs,
+        success_rate=sr, cost=total_cost, makespan=executor.t,
+        scheduling_seconds=controller.route_seconds + fold.fold_seconds,
+        llm_seconds=executor.llm_secs,
         per_model_counts=pm_counts, per_model_correct=pm_correct,
-        per_model_cost=pm_cost, hedged=hedged,
+        per_model_cost=pm_cost, hedged=executor.hedged,
+        windows=controller.windows,
+        dual_iters=controller.dual_iters if cfg.streaming_dual else 0,
     )

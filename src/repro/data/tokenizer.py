@@ -23,3 +23,19 @@ def encode(text: str, max_len: int = 64) -> np.ndarray:
 
 def encode_batch(texts: List[str], max_len: int = 64) -> np.ndarray:
     return np.stack([encode(t, max_len) for t in texts])
+
+
+def encode_for_config(cfg, text: str, max_len: int = 64) -> np.ndarray:
+    """Encode for a *model* (not the router): strip padding and remap ids
+    into the config's vocab so smoke-sized models (vocab 512) can decode
+    router-tokenized text.  Ids already in range are kept verbatim; the
+    rest wrap into [2, vocab) so PAD/CLS stay reserved.  Callers serving a
+    heterogeneous pool should pass the smallest-vocab config."""
+    vocab = int(cfg.vocab_size)
+    if vocab < 3:
+        raise ValueError(f"config vocab_size={vocab} leaves no room for "
+                         "PAD/CLS + content ids")
+    toks = encode(text, max_len)
+    toks = toks[toks != PAD]
+    return np.where(toks < vocab, toks, 2 + toks % (vocab - 2)).astype(
+        np.int32)

@@ -21,6 +21,17 @@ the winning assignment from those multipliers in one vectorized argmin.
 Padded rows (N not a multiple of the query block) are masked out of every
 histogram/sum in-kernel.
 
+Streaming (ISSUE 5): both kernel layouts take warm-start multipliers
+(λ0 via the scalar vector, λ2_0 as a second row of the aux/loads input) so
+a windowed stream resumes the ascent from the previous window's dual point,
+and both implement early exit by *freezing*: once a feasible iterate is
+banked and ``patience`` iterations (cumulative) have stalled (multiplier
+movement or constraint residual under ``stall_tol``), the dual update stops
+being applied — remaining grid steps recompute identical values, so the
+emitted multipliers and ``iters_run`` match the reference while_loop's
+early exit exactly (a Pallas grid cannot shrink dynamically, so freezing
+is the device-side equivalent).
+
 ``assign_step_kernel`` (one fused argmin + histogram step) is kept as the
 single-step building block and micro-benchmark target.
 """
@@ -44,53 +55,79 @@ def backend_interpret(interpret: Optional[bool] = None) -> bool:
 
 
 # scratch slot layout for the (8,) SMEM scalar buffer
-_LAM, _LAM_BEST, _BEST, _FOUND, _ASUM, _BSUM = range(6)
+_LAM, _LAM_BEST, _BEST, _FOUND, _ASUM, _BSUM, _STALL, _TRUN = range(8)
 # row layout of the (3, m) vector scratch
 _L2, _L2B, _CNT = range(3)
 
 
-def _fused_kernel(scal_ref, ab_ref, loads_ref, out_ref, smem, vec, *,
-                  n: int, m: int, bq: int, masked: bool):
+def _fused_kernel(scal_ref, ab_ref, aux_ref, out_ref, smem, vec, *,
+                  n: int, m: int, bq: int, masked: bool, patience: int):
     t = pl.program_id(0)
     b = pl.program_id(1)
     thresh = scal_ref[0]
     lr_eff = scal_ref[1]
     lr_load = scal_ref[2]
-    loads = loads_ref[...]                                   # (m,)
+    lam0 = scal_ref[3]
+    stall_tol = scal_ref[4]
+    step0 = scal_ref[5]
+    loads = aux_ref[0, :]                                    # (m,)
+    lam20 = aux_ref[1, :]                                    # warm-start λ2
 
     @pl.when((t == 0) & (b == 0))
     def _init():
-        smem[_LAM] = 0.0
+        smem[_LAM] = lam0
         smem[_LAM_BEST] = 0.0
         smem[_BEST] = jnp.float32(jnp.inf)
         smem[_FOUND] = 0.0
         smem[_ASUM] = 0.0
         smem[_BSUM] = 0.0
+        smem[_STALL] = 0.0
+        smem[_TRUN] = 0.0
         vec[...] = jnp.zeros_like(vec)
+        vec[_L2, :] = lam20
 
     @pl.when((t > 0) & (b == 0))
     def _finalize_prev_iter():
         # iteration t-1's stats are complete: best-feasible bookkeeping +
-        # dual update (Eq. 9-10) before any block of iteration t runs
-        asum = smem[_ASUM]
-        bsum = smem[_BSUM]
-        cnt = vec[_CNT, :]
-        feasible = (bsum <= thresh) & jnp.all(cnt <= loads)
-        better = feasible & (asum < smem[_BEST])
+        # dual update (Eq. 9-12) before any block of iteration t runs.
+        # The whole finalize is gated on the freeze flag: past `patience`
+        # stalled updates the multipliers stop moving, every later iteration
+        # recomputes the same assignment, and — like the reference
+        # while_loop, which exits outright — none of it is bookkept.
+        @pl.when(smem[_STALL] < jnp.float32(patience))
+        def _bookkeep_and_update():
+            asum = smem[_ASUM]
+            bsum = smem[_BSUM]
+            cnt = vec[_CNT, :]
+            feasible = (bsum <= thresh) & jnp.all(cnt <= loads)
+            better = feasible & (asum < smem[_BEST])
 
-        @pl.when(better)
-        def _commit_best():
-            smem[_BEST] = asum
-            smem[_LAM_BEST] = smem[_LAM]
-            vec[_L2B, :] = vec[_L2, :]
+            @pl.when(better)
+            def _commit_best():
+                smem[_BEST] = asum
+                smem[_LAM_BEST] = smem[_LAM]
+                vec[_L2B, :] = vec[_L2, :]
 
-        smem[_FOUND] = jnp.where(feasible, 1.0, smem[_FOUND])
-        # diminishing step 1/sqrt(1 + (t-1)) for subgradient convergence
-        step = jax.lax.rsqrt(t.astype(jnp.float32))
-        smem[_LAM] = jnp.maximum(
-            smem[_LAM] + lr_eff * step * (bsum - thresh), 0.0)
-        vec[_L2, :] = jnp.maximum(
-            vec[_L2, :] + lr_load * step * (cnt - loads), 0.0)
+            smem[_FOUND] = jnp.where(feasible, 1.0, smem[_FOUND])
+            # diminishing step 1/sqrt(1 + step0 + (t-1)), continuing the
+            # stream's schedule for subgradient convergence
+            step = jax.lax.rsqrt(step0 + t.astype(jnp.float32))
+            lam_new = jnp.maximum(
+                smem[_LAM] + lr_eff * step * (bsum - thresh), 0.0)
+            lam2_new = jnp.maximum(
+                vec[_L2, :] + lr_load * step * (cnt - loads), 0.0)
+            delta = (jnp.abs(lam_new - smem[_LAM])
+                     + jnp.abs(lam2_new - vec[_L2, :]).sum())
+            denom = 1.0 + jnp.abs(lam_new) + jnp.abs(lam2_new).sum()
+            resid = jnp.abs(bsum - thresh) / (1.0 + jnp.abs(thresh))
+            stalled = (smem[_FOUND] > 0.0) & ((delta < stall_tol * denom)
+                                              | (resid < stall_tol))
+            # cumulative count — see the reference body in core.optimizer
+            smem[_STALL] += jnp.where(stalled, 1.0, 0.0)
+            smem[_TRUN] += 1.0
+            smem[_LAM] = lam_new
+            vec[_L2, :] = lam2_new
+
         smem[_ASUM] = 0.0
         smem[_BSUM] = 0.0
         vec[_CNT, :] = jnp.zeros_like(loads)
@@ -121,24 +158,31 @@ def _fused_kernel(scal_ref, ab_ref, loads_ref, out_ref, smem, vec, *,
     out_ref[3] = smem[_FOUND]
     out_ref[4] = smem[_ASUM]
     out_ref[5] = smem[_BSUM]
-    out_ref[6] = 0.0
-    out_ref[7] = 0.0
+    out_ref[6] = smem[_TRUN]
+    out_ref[7] = smem[_STALL]
     out_ref[pl.ds(8, m)] = vec[_L2, :]
     out_ref[pl.ds(8 + m, m)] = vec[_L2B, :]
     out_ref[pl.ds(8 + 2 * m, m)] = vec[_CNT, :]
 
 
-def _fused_kernel_whole(scal_ref, ab_ref, loads_ref, out_ref, *,
-                        m: int, bq: int, iters: int):
+def _fused_kernel_whole(scal_ref, ab_ref, aux_ref, out_ref, *,
+                        m: int, bq: int, iters: int, patience: int):
     """Single-block variant: the whole instance fits one query block (which
     also means no padded rows: bq == n), so the dual-ascent loop is a
     fori_loop over pure values inside one grid step — no per-iteration grid
-    bookkeeping at all.  Identical float trajectory to the multi-block
-    kernel; output layout as documented in ``fused_dual_solve``."""
+    bookkeeping at all.  Early exit is the same freeze as the grid layout
+    (a fori_loop trip count is static): once stalled past ``patience`` the
+    carried multipliers stop changing and ``t_run`` stops counting.
+    Identical float trajectory to the multi-block kernel; output layout as
+    documented in ``fused_dual_solve``."""
     thresh = scal_ref[0]
     lr_eff = scal_ref[1]
     lr_load = scal_ref[2]
-    loads = loads_ref[...]
+    lam0 = scal_ref[3]
+    stall_tol = scal_ref[4]
+    step0 = scal_ref[5]
+    loads = aux_ref[0, :]
+    lam20 = aux_ref[1, :]
     ab = ab_ref[...].astype(jnp.float32)
     a = ab[:, :m]
     bm = ab[:, m:]
@@ -151,7 +195,8 @@ def _fused_kernel_whole(scal_ref, ab_ref, loads_ref, out_ref, *,
          jnp.tile(jnp.eye(m, dtype=jnp.float32), (bq, 1))], axis=1)
 
     def body(t, carry):
-        lam, lam2, lam_best, lam2_best, best, found = carry
+        lam, lam2, lam_best, lam2_best, best, found, stall, t_run = carry
+        active = stall < patience
         # assign + stats + finalize all inside the iteration (the reference
         # flow): no cross-iteration stats carry needed with a single block
         scores = a + lam * bm + lam2[None, :]
@@ -160,23 +205,37 @@ def _fused_kernel_whole(scal_ref, ab_ref, loads_ref, out_ref, *,
         stats = jnp.dot(onehot.reshape(-1), stat_mat,
                         preferred_element_type=jnp.float32)
         asum, bsum, cnt = stats[0], stats[1], stats[2:]
-        feasible = (bsum <= thresh) & jnp.all(cnt <= loads)
+        # bookkeeping is gated on `active` so a frozen (early-exited) solve
+        # matches the reference while_loop, which never sees the iterate it
+        # exited on
+        feasible = active & (bsum <= thresh) & jnp.all(cnt <= loads)
         better = feasible & (asum < best)
         best = jnp.where(better, asum, best)
         lam_best = jnp.where(better, lam, lam_best)
         lam2_best = jnp.where(better, lam2, lam2_best)
         found = found | feasible
-        step = jax.lax.rsqrt(1.0 + t.astype(jnp.float32))
-        lam = jnp.maximum(lam + lr_eff * step * (bsum - thresh), 0.0)
-        lam2 = jnp.maximum(lam2 + lr_load * step * (cnt - loads), 0.0)
-        return lam, lam2, lam_best, lam2_best, best, found
+        step = jax.lax.rsqrt(1.0 + step0 + t.astype(jnp.float32))
+        lam_new = jnp.maximum(lam + lr_eff * step * (bsum - thresh), 0.0)
+        lam2_new = jnp.maximum(lam2 + lr_load * step * (cnt - loads), 0.0)
+        delta = (jnp.abs(lam_new - lam) + jnp.abs(lam2_new - lam2).sum())
+        denom = 1.0 + jnp.abs(lam_new) + jnp.abs(lam2_new).sum()
+        resid = jnp.abs(bsum - thresh) / (1.0 + jnp.abs(thresh))
+        stalled = found & ((delta < stall_tol * denom)
+                           | (resid < stall_tol))
+        # cumulative count — see the reference body in core.optimizer
+        stall = stall + jnp.where(active & stalled, 1, 0)
+        lam = jnp.where(active, lam_new, lam)
+        lam2 = jnp.where(active, lam2_new, lam2)
+        t_run = t_run + active.astype(jnp.int32)
+        return lam, lam2, lam_best, lam2_best, best, found, stall, t_run
 
     zero_m = jnp.zeros((m,), jnp.float32)
-    init = (jnp.float32(0.0), zero_m, jnp.float32(0.0), zero_m,
-            jnp.float32(jnp.inf), jnp.asarray(False))
-    lam, lam2, lam_best, lam2_best, best, found = jax.lax.fori_loop(
+    init = (lam0, lam20, jnp.float32(0.0), zero_m,
+            jnp.float32(jnp.inf), jnp.asarray(False),
+            jnp.int32(0), jnp.int32(0))
+    lam, lam2, lam_best, lam2_best, best, found, _, t_run = jax.lax.fori_loop(
         0, iters, body, init)
-    # every iteration is fully finalized here, so out slots 4..7 and the
+    # every iteration is fully finalized here, so out slots 4/5/7 and the
     # histogram row are unused; ops.solve_fused skips its finalize for the
     # single-block layout
     out_ref[...] = jnp.zeros_like(out_ref)
@@ -184,23 +243,30 @@ def _fused_kernel_whole(scal_ref, ab_ref, loads_ref, out_ref, *,
     out_ref[1] = lam_best
     out_ref[2] = best
     out_ref[3] = found.astype(jnp.float32)
+    out_ref[6] = t_run.astype(jnp.float32)
     out_ref[pl.ds(8, m)] = lam2
     out_ref[pl.ds(8 + m, m)] = lam2_best
 
 
 def fused_dual_solve(a_mat, b_mat, thresh, loads, *, iters: int = 150,
                      lr_eff: float, lr_load: float, bq: int = 256,
+                     lam0=0.0, lam20=None, stall_tol=0.0, step0=0.0,
+                     patience: int = 3,
                      interpret: Optional[bool] = None):
     """Run the full dual-ascent loop in one kernel launch.
 
-    a_mat/b_mat (N, M) unified score matrices; thresh scalar; loads (M,).
-    Returns (packed (8 + 3M,) f32 vector, n_query_blocks):
-    [lam, lam_best, best_objective, found, last ΣA, last ΣB, 0, 0,
-     lam2 (M,), lam2_best (M,), last histogram (M,)]
-    — the multiplier state after ``iters`` iterations (plus, for the
-    multi-block grid layout, the final iteration's statistics, which the
-    caller must still finalize).  The caller recomputes the best/last
-    assignment from the multipliers (see ``ops.solve_fused``).
+    a_mat/b_mat (N, M) unified score matrices; thresh scalar; loads (M,);
+    lam0 / lam20 warm-start the multipliers (streaming windows); stall_tol
+    > 0 freezes the ascent once the relative multiplier movement stays
+    below it for ``patience`` cumulative updates after a feasible iterate
+    was banked.  Returns (packed (8 + 3M,) f32 vector, n_query_blocks):
+    [lam, lam_best, best_objective, found, last ΣA, last ΣB,
+     updates_applied, stall_count, lam2 (M,), lam2_best (M,),
+     last histogram (M,)]
+    — the multiplier state after the loop (plus, for the multi-block grid
+    layout, the final iteration's statistics, which the caller must still
+    finalize *iff* stall_count < patience).  The caller recomputes the
+    best/last assignment from the multipliers (see ``ops.solve_fused``).
     """
     n, m = a_mat.shape
     bq = min(bq, n)
@@ -211,36 +277,43 @@ def fused_dual_solve(a_mat, b_mat, thresh, loads, *, iters: int = 150,
     nb = (n + pad) // bq
     scal = jnp.stack([jnp.asarray(thresh, jnp.float32),
                       jnp.asarray(lr_eff, jnp.float32),
-                      jnp.asarray(lr_load, jnp.float32)])
+                      jnp.asarray(lr_load, jnp.float32),
+                      jnp.asarray(lam0, jnp.float32),
+                      jnp.asarray(stall_tol, jnp.float32),
+                      jnp.asarray(step0, jnp.float32)])
 
     loads = jnp.asarray(loads, jnp.float32)
+    if lam20 is None:
+        lam20 = jnp.zeros((m,), jnp.float32)
+    # loads + warm-start λ2 packed as one (2, m) aux input
+    aux = jnp.stack([loads, jnp.asarray(lam20, jnp.float32)])
     if nb == 1:
         # whole instance in one block (bq == n, so no padding): run the
         # loop inside a single grid step
         kernel = functools.partial(_fused_kernel_whole, m=m, bq=bq,
-                                   iters=iters)
+                                   iters=iters, patience=patience)
         return pl.pallas_call(
             kernel,
             grid=(1,),
             in_specs=[
                 pl.BlockSpec(memory_space=pl.ANY),           # scalars
                 pl.BlockSpec((bq, 2 * m), lambda i: (0, 0)),  # A | B packed
-                pl.BlockSpec((m,), lambda i: (0,)),          # loads
+                pl.BlockSpec((2, m), lambda i: (0, 0)),      # loads | λ2_0
             ],
             out_specs=pl.BlockSpec((8 + 3 * m,), lambda i: (0,)),
             out_shape=jax.ShapeDtypeStruct((8 + 3 * m,), jnp.float32),
             interpret=backend_interpret(interpret),
-        )(scal, ab, loads), 1
+        )(scal, ab, aux), 1
 
     kernel = functools.partial(_fused_kernel, n=n, m=m, bq=bq,
-                               masked=bool(pad))
+                               masked=bool(pad), patience=patience)
     out = pl.pallas_call(
         kernel,
         grid=(iters, nb),
         in_specs=[
             pl.BlockSpec(memory_space=pl.ANY),               # scalars
             pl.BlockSpec((bq, 2 * m), lambda t, b: (b, 0)),  # A | B packed
-            pl.BlockSpec((m,), lambda t, b: (0,)),           # loads
+            pl.BlockSpec((2, m), lambda t, b: (0, 0)),       # loads | λ2_0
         ],
         out_specs=pl.BlockSpec((8 + 3 * m,), lambda t, b: (0,)),
         out_shape=jax.ShapeDtypeStruct((8 + 3 * m,), jnp.float32),
@@ -249,7 +322,7 @@ def fused_dual_solve(a_mat, b_mat, thresh, loads, *, iters: int = 150,
             pltpu.VMEM((3, m), jnp.float32),                 # λ2 | λ2@best | histogram
         ],
         interpret=backend_interpret(interpret),
-    )(scal, ab, loads)
+    )(scal, ab, aux)
     return out, nb
 
 

@@ -3,6 +3,11 @@
 CPU demo (smoke configs, real models decoding):
   PYTHONPATH=src python -m repro.launch.serve --requests 24 --mode batching
 
+Streaming control plane (ISSUE 5): requests can arrive over time instead
+of all at once, and the router can run as a persistent dual controller —
+  PYTHONPATH=src python -m repro.launch.serve --arrival poisson \
+      --arrival-rate 4 --stream
+
 The same server binds full configs to per-arch submeshes on hardware; the
 dry-run proves every (arch x decode shape) lowers on the production mesh.
 """
@@ -15,9 +20,9 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.core import (OmniRouter, RetrievalPredictor, RouterConfig)
+from repro.data import arrivals, tokenizer
 from repro.data.qaserve import generate
 from repro.serving.engine import Endpoint, MultiLLMServer, Request
-from repro.data import tokenizer
 
 
 def main(argv=None):
@@ -27,6 +32,13 @@ def main(argv=None):
     ap.add_argument("--alpha", type=float, default=0.75)
     ap.add_argument("--loads", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--arrival", default="batch",
+                    choices=sorted(arrivals.GENERATORS))
+    ap.add_argument("--arrival-rate", type=float, default=4.0,
+                    help="arrivals per decode step (non-batch processes)")
+    ap.add_argument("--stream", action="store_true",
+                    help="persistent dual controller: warm-started windows, "
+                         "cumulative budget/alpha ledger")
     args = ap.parse_args(argv)
 
     ds = generate(n=600, seed=0)
@@ -41,12 +53,17 @@ def main(argv=None):
     endpoints = [Endpoint(get_smoke_config(a), max_concurrency=args.loads,
                           seed=i) for i, a in enumerate(pool_archs)]
     server = MultiLLMServer(endpoints, router,
-                            batch_size=1 if args.mode == "streaming" else 0)
+                            batch_size=1 if args.mode == "streaming" else 0,
+                            stream=args.stream, horizon=test.n)
 
+    # remap router tokens into the pool's (smoke-sized) model vocab — the
+    # shared helper replaces the old hardcoded `toks % 500` at call sites
+    vocab_cfg = min((e.cfg for e in endpoints), key=lambda c: c.vocab_size)
+    steps = arrivals.make(args.arrival, test.n, rate=args.arrival_rate, seed=0)
     for i in range(test.n):
-        toks = tokenizer.encode(test.queries[i], 32)
-        toks = toks[toks != tokenizer.PAD] % 500  # map into smoke vocab
-        server.submit(Request(rid=i, tokens=toks, max_new=args.max_new))
+        toks = tokenizer.encode_for_config(vocab_cfg, test.queries[i], 32)
+        server.submit(Request(rid=i, tokens=toks, max_new=args.max_new),
+                      at_step=steps[i])
 
     t0 = time.time()
     done = server.run(lambda batch: test.subset(
@@ -57,9 +74,12 @@ def main(argv=None):
     sr = float(test.correct[np.arange(len(assign)), assign].mean())
     cost = float(test.cost_matrix()[np.arange(len(assign)), assign].sum())
     print(f"served {len(done)}/{test.n} requests in {wall:.1f}s "
-          f"({args.mode}); routed SR={sr:.3f} cost=${cost:.4f}; "
+          f"({args.mode}, arrival={args.arrival}"
+          f"{', streaming dual' if args.stream else ''}); "
+          f"routed SR={sr:.3f} cost=${cost:.4f}; "
           f"route overhead {server.route_seconds:.3f}s over "
-          f"{server.route_calls} calls")
+          f"{server.route_calls} windows"
+          + (f", {server.dual_iters} dual iters" if args.stream else ""))
     for j, e in enumerate(endpoints):
         n_j = int((assign == j).sum())
         print(f"  endpoint {j} ({pool_archs[j]}): {n_j} reqs, "

@@ -22,9 +22,14 @@ on any result (async dispatch overlaps the pool).
 the whole packed, left-padded batch on every admit and completion) as the
 benchmark baseline — ``benchmarks/bench_serving.py`` races the two.
 
-The :class:`MultiLLMServer` admits requests per the paper's capacity rule,
-routes batches through a Policy (OmniRouter or a baseline), and accounts
-true cost/success via the QAServe ground truth when available.
+The :class:`MultiLLMServer` runs on the SAME control loop as the
+event-driven simulator (``repro.core.control.ControlLoop``): requests are
+released by arrival step, admitted per the paper's capacity rule
+(``AdmissionRule``), and routed through a Policy — with ``stream=True``,
+through the persistent dual controller (``Policy.route_window``), whose
+multipliers and budget/α ledger carry across windows while the live
+per-endpoint in-flight counts feed the workload constraint.  True
+cost/success is accounted via the QAServe ground truth when available.
 """
 from __future__ import annotations
 
@@ -32,13 +37,15 @@ import dataclasses
 import time
 from collections import deque
 from functools import partial
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.control import (AdmissionRule, ControlLoop, FoldBuffer,
+                                StreamController)
 from repro.models import build_model
 from repro.models.zoo import (PAGED_POOL_KEYS, pad_cache, pages_per_request,
                               prefill_into_pages, reset_slot)
@@ -393,53 +400,34 @@ class RestartEndpoint:
         return self.step_end(self.step_begin())
 
 
-class MultiLLMServer:
-    """Router + endpoint pool with admission control, hedging, and online
-    fold-back of completed requests into the router's vector store."""
+class _EngineExecutor:
+    """The endpoint pool behind the shared control loop
+    (``repro.core.control.ControlLoop``): the stream clock is the decode
+    step index, ``advance`` dispatches every endpoint's chunk before
+    blocking on any result (jax async dispatch overlaps the pool), and the
+    live per-endpoint in-flight counts are what the routing window sees."""
 
-    def __init__(self, endpoints: List[Endpoint], policy, *,
-                 batch_size: int = 0, hedge_after_steps: int = 0,
-                 fold_online: bool = False, fold_chunk: int = 0):
-        self.endpoints = endpoints
-        self.policy = policy
-        cap = sum(e.L for e in endpoints)
-        self.batch_size = batch_size or max(1, cap // 2)
-        self.max_inflight = max(1, cap // 2)
-        self.hedge_after = hedge_after_steps
-        self.fold_online = fold_online
-        self.fold_chunk = fold_chunk or self.batch_size
-        self.queue: deque = deque()
-        self.completed: List[Request] = []
-        self._fold_buf: List[Request] = []
-        self.folded = 0
-        self.route_calls = 0
-        self.route_seconds = 0.0
+    def __init__(self, server: "MultiLLMServer", max_steps: int):
+        self.server = server
+        self.max_steps = max_steps
+        self.steps = 0
+        self.stopped = False
 
-    def submit(self, req: Request):
-        req.submitted = time.perf_counter()
-        self.queue.append(req)
+    def now(self) -> float:
+        return float(self.steps)
 
-    def _inflight(self) -> int:
-        return sum(e.active_count() for e in self.endpoints)
+    def loads(self) -> np.ndarray:
+        return np.array([e.L for e in self.server.endpoints], float)
 
-    def _admit_batch(self, route_features):
-        take = min(self.batch_size, len(self.queue),
-                   self.max_inflight - self._inflight())
-        if take <= 0:
-            return
-        batch = [self.queue.popleft() for _ in range(take)]
-        loads = np.array([e.L for e in self.endpoints], float)
-        counts = np.array([e.active_count() for e in self.endpoints], float)
-        t0 = time.perf_counter()
-        # the same admission/routing path as the event-driven simulator:
-        # RouteBatch arrays in, assignment out (core.scheduler.route_via_batch)
-        from repro.core.scheduler import route_via_batch
-        x = route_via_batch(self.policy, route_features(batch), loads, counts)
-        self.route_seconds += time.perf_counter() - t0
-        self.route_calls += 1
-        for req, j in zip(batch, x):
+    def counts(self) -> np.ndarray:
+        return np.array([e.active_count() for e in self.server.endpoints],
+                        float)
+
+    def dispatch(self, items, x) -> List[Request]:
+        rejected = []
+        for req, j in zip(items, x):
             j = int(j)
-            ep = self.endpoints[j]
+            ep = self.server.endpoints[j]
             if not getattr(ep, "can_serve", lambda r: True)(req):
                 # can NEVER fit this endpoint's fixed shapes: fail it cleanly
                 # instead of crashing the server or re-queueing forever
@@ -447,47 +435,149 @@ class MultiLLMServer:
                 req.endpoint = j
                 req.output = []
                 req.finished = time.perf_counter()
-                self.completed.append(req)
+                self.server.completed.append(req)
                 continue
             if ep.has_capacity():
                 req.endpoint = j
                 ep.admit(req)
             else:  # paper's queueing: wait for capacity
-                self.queue.appendleft(req)
+                rejected.append(req)
+        return rejected
+
+    def advance(self, wake_at):
+        if self.steps >= self.max_steps:
+            self.stopped = True
+            return [], False
+        active = sum(e.active_count() for e in self.server.endpoints)
+        if active == 0 and wake_at is not None and wake_at > self.steps:
+            # pool idle, traffic still coming: jump to the next arrival
+            self.steps = int(np.ceil(wake_at))
+            return [], True
+        # dispatch every endpoint's chunk before blocking on any result:
+        # jax async dispatch overlaps the whole pool's decode work
+        pending = [(e, e.step_begin()) for e in self.server.endpoints]
+        done: List[Request] = []
+        progressed = False
+        for e, p in pending:
+            fin = e.step_end(p)
+            progressed = progressed or bool(fin) or bool(e.active_count())
+            done.extend(fin)
+        self.steps += 1
+        self.server.completed.extend(done)
+        return done, progressed
+
+    def tick(self):
+        pass
+
+
+class MultiLLMServer:
+    """Router + endpoint pool behind the shared streaming control loop:
+    admission per the paper's capacity rule, arrival-step release, optional
+    persistent dual controller (``stream=True`` threads a DualState through
+    ``policy.route_window`` so multipliers and the budget/α ledger carry
+    across windows), and online fold-back of completed requests into the
+    router's vector store."""
+
+    def __init__(self, endpoints: List[Endpoint], policy, *,
+                 batch_size: int = 0, hedge_after_steps: int = 0,
+                 fold_online: bool = False, fold_chunk: int = 0,
+                 stream: bool = False, horizon: int = 0,
+                 window_steps: float = 0.0):
+        self.endpoints = endpoints
+        self.policy = policy
+        cap = sum(e.L for e in endpoints)
+        self.rule = AdmissionRule(batch_size).resolve(cap)
+        self.batch_size = self.rule.batch_size
+        self.max_inflight = self.rule.max_inflight
+        self.hedge_after = hedge_after_steps
+        self.fold_online = fold_online
+        self.fold_chunk = fold_chunk or self.batch_size
+        self.stream = stream
+        self.horizon = horizon
+        self.window_steps = window_steps
+        self.queue: deque = deque()     # (arrival_step, Request)
+        self.completed: List[Request] = []
+        self._fold_buf: List[Request] = []   # direct fold-back entry point
+        self.folded = 0
+        self.route_calls = 0
+        self.route_seconds = 0.0
+        self.windows = 0
+        self.dual_iters = 0
+        self._controller: Optional[StreamController] = None
+
+    def submit(self, req: Request, at_step: float = 0.0):
+        """Queue a request; ``at_step`` releases it into the stream once
+        the engine clock (decode step index) reaches it.
+
+        A request NO endpoint can fit is failed here, before it is ever
+        routed — otherwise the streaming ledger would charge its predicted
+        cost/quality for work that is never served and the budget would
+        drift (the dual controller's accounting records what was routed)."""
+        req.submitted = time.perf_counter()
+        if self.endpoints and not any(
+                getattr(ep, "can_serve", lambda r: True)(req)
+                for ep in self.endpoints):
+            req.done = True
+            req.output = []
+            req.finished = time.perf_counter()
+            self.completed.append(req)
+            return
+        self.queue.append((float(at_step), req))
+
+    def _inflight(self) -> int:
+        return sum(e.active_count() for e in self.endpoints)
 
     def _fold(self, route_features, *, force: bool = False):
-        """Online half of the prediction plane: completed requests are folded
-        back into the policy's vector store (``policy.observe``) so later
-        routing decisions retrieve over them.  Uses the same feature producer
-        as admission — if it carries no labels (a live engine before human
-        feedback arrives), folding is a silent no-op."""
+        """Fold ``_fold_buf`` into the policy's store — the manual entry
+        point for completions that did not flow through :meth:`run` (the
+        loop folds its own through a :class:`FoldBuffer`)."""
         if not self.fold_online or not self._fold_buf:
             return
         if not force and len(self._fold_buf) < self.fold_chunk:
             return
         from repro.core.scheduler import fold_completions
-        feats = route_features(self._fold_buf)
-        if fold_completions(self.policy, feats,
+        if fold_completions(self.policy, route_features(self._fold_buf),
                             np.arange(len(self._fold_buf))):
             self.folded += len(self._fold_buf)
         self._fold_buf.clear()
 
     def run(self, route_features, *, max_steps: int = 10_000):
-        steps = 0
-        while (self.queue or self._inflight()) and steps < max_steps:
-            self._admit_batch(route_features)
-            # dispatch every endpoint's chunk before blocking on any result:
-            # jax async dispatch overlaps the whole pool's decode work
-            pending = [(e, e.step_begin()) for e in self.endpoints]
-            progressed = False
-            for e, p in pending:
-                done = e.step_end(p)
-                progressed = progressed or bool(done) or bool(e.active_count())
-                self.completed.extend(done)
-                self._fold_buf.extend(done)
-            steps += 1
-            self._fold(route_features)
-            if not progressed and not self.queue:
-                break
-        self._fold(route_features, force=True)
+        # ONE controller for the server's lifetime: the DualState ledger
+        # and warm multipliers must survive across run() calls (an early
+        # max_steps exit requeues work for the next call — re-solving it
+        # against a reset budget would double-spend)
+        if self._controller is None:
+            self._controller = StreamController(
+                self.policy, horizon=self.horizon or len(self.queue),
+                stream=self.stream)
+        controller = self._controller
+        windows0 = controller.windows
+        iters0 = controller.dual_iters
+        fold = FoldBuffer(self.policy, route_features,
+                          enabled=self.fold_online, chunk=self.fold_chunk)
+        items = [req for _, req in self.queue]
+        times = np.array([t for t, _ in self.queue])
+        self.queue.clear()
+        executor = _EngineExecutor(self, max_steps)
+        loop = ControlLoop(
+            executor=executor, controller=controller, rule=self.rule,
+            items=items, features=route_features, fold=fold,
+            arrival_times=times, window=self.window_steps,
+            drain_admissions=False, requeue_front=True)
+        loop.run()
+        # an early exit (max_steps) leaves un-served requests in the loop's
+        # queues — put them back, REBASED to the fresh clock a later run()
+        # starts with (already-released items are due immediately), so the
+        # next call picks them up instead of silently dropping them
+        now = executor.now()
+        for req in loop.ready:
+            self.queue.append((0.0, req))
+        for at, req in loop.pending:
+            self.queue.append((max(0.0, at - now), req))
+        self.route_seconds += controller.route_seconds
+        controller.route_seconds = 0.0
+        self.route_calls += controller.windows - windows0
+        self.folded += fold.folded
+        self.windows += controller.windows - windows0
+        self.dual_iters += controller.dual_iters - iters0
         return self.completed

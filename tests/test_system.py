@@ -75,9 +75,9 @@ def test_serving_engine_routes_real_models():
     eps = [Endpoint(get_smoke_config(a), max_concurrency=3, seed=i)
            for i, a in enumerate(["h2o-danube-3-4b", "hymba-1.5b"])]
     srv = MultiLLMServer(eps, router)
+    vocab_cfg = min((e.cfg for e in eps), key=lambda c: c.vocab_size)
     for i in range(test.n):
-        toks = tokenizer.encode(test.queries[i], 16)
-        toks = toks[toks != tokenizer.PAD] % 500
+        toks = tokenizer.encode_for_config(vocab_cfg, test.queries[i], 16)
         srv.submit(Request(rid=i, tokens=toks, max_new=2))
     done = srv.run(lambda b: test.subset(np.array([r.rid for r in b])))
     assert len(done) == test.n
