@@ -1,0 +1,124 @@
+"""Mesh-sharded dual solver benchmark (ISSUE 6) — writes
+``BENCH_sharded.json`` at the repo root.
+
+Weak scaling of :meth:`DualSolver.solve` over the query axis on 8 virtual
+CPU devices: one routing window of N ∈ {64k, 256k, 1M} queries is solved
+under the ``("data",)`` query mesh (``shard_map`` over 8 query shards, dual
+update as a cross-shard reduction of per-block partials).  Asserted:
+
+- **parity** — at the smallest N the mesh-sharded solve is BIT-identical to
+  the single-device blocked solve (assignment + multipliers), the tentpole
+  contract;
+- **near-flat per-query time** — per-query solve time at the largest N is
+  within 2.5x of the smallest N (fixed dispatch/reduction overheads
+  amortize; the sweep spans 16x more queries than fit a typical
+  single-window solve).
+
+The benchmark re-execs itself in a subprocess: the XLA host-device-count
+flag must be set before jax initializes, and the rest of the suite runs on
+ONE device.  ``SHARDED_BENCH_SMOKE=1`` shrinks to {8k, 32k} for CI.
+
+  PYTHONPATH=src python -m benchmarks.run --only sharded
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+from .common import emit
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(_ROOT, "BENCH_sharded.json")
+SMOKE = os.environ.get("SHARDED_BENCH_SMOKE", "0") == "1"
+SIZES = (8192, 32768) if SMOKE else (65536, 262144, 1048576)
+N_DEV = 8
+ITERS = 24
+REPEATS = 3
+
+
+def _child() -> None:
+    import numpy as np
+    import jax
+    from repro.common import query_mesh, query_rules, use_mesh
+    from repro.core.optimizer import DualSolver
+
+    assert jax.device_count() == N_DEV, jax.devices()
+    mesh, rules = query_mesh(N_DEV), query_rules()
+    solver = DualSolver(mode="quality", iters=ITERS, lr_constraint=4.0,
+                        norm_grad=True, shards=N_DEV)
+    rows = []
+    for n in SIZES:
+        rng = np.random.default_rng(n)
+        m = 8
+        cost = (rng.uniform(0.2, 3.0, (n, m)) * 1e-3).astype(np.float32)
+        quality = rng.uniform(0.0, 1.0, (n, m)).astype(np.float32)
+        loads = np.full((m,), 1.2 * n / m, np.float32)
+
+        with use_mesh(mesh, rules):
+            x, info = solver.solve(cost, quality, 0.55, loads)  # compile
+            jax.block_until_ready(x)
+            best = np.inf
+            for _ in range(REPEATS):
+                t0 = time.perf_counter()
+                xr, _ = solver.solve(cost, quality, 0.55, loads)
+                jax.block_until_ready(xr)
+                best = min(best, time.perf_counter() - t0)
+        rows.append({"n": n, "m": m, "solve_s": best,
+                     "per_query_us": best / n * 1e6,
+                     "feasible": bool(np.asarray(info.feasible))})
+        print(f"# n={n}: {best:.3f}s  {best / n * 1e6:.3f}us/query",
+              file=sys.stderr)
+
+    # parity gate at the smallest N: mesh == single-device, bit for bit
+    n = SIZES[0]
+    rng = np.random.default_rng(n)
+    cost = (rng.uniform(0.2, 3.0, (n, 8)) * 1e-3).astype(np.float32)
+    quality = rng.uniform(0.0, 1.0, (n, 8)).astype(np.float32)
+    loads = np.full((8,), 1.2 * n / 8, np.float32)
+    x0, i0 = solver.solve(cost, quality, 0.55, loads)
+    with use_mesh(mesh, rules):
+        x1, i1 = solver.solve(cost, quality, 0.55, loads)
+    parity = (np.array_equal(np.asarray(x0), np.asarray(x1))
+              and np.array_equal(np.asarray(i0.lam), np.asarray(i1.lam))
+              and np.array_equal(np.asarray(i0.lam_load),
+                                 np.asarray(i1.lam_load)))
+    assert parity, "mesh-sharded solve drifted from the single-device solve"
+
+    pq = [r["per_query_us"] for r in rows]
+    flat = pq[-1] <= 2.5 * pq[0]
+    assert flat, f"per-query time not near-flat: {pq}"
+
+    payload = {"backend": jax.default_backend(), "devices": N_DEV,
+               "smoke": SMOKE, "iters": ITERS, "parity_bit_exact": parity,
+               "weak_scaling_flat": flat, "rows": rows}
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(json.dumps(payload))
+
+
+def run() -> None:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={N_DEV}"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_sharded", "--child"],
+        capture_output=True, text=True, env=env, cwd=_ROOT, timeout=3600)
+    sys.stderr.write(out.stderr)
+    if out.returncode != 0:
+        raise RuntimeError(f"sharded bench child failed:\n{out.stderr[-3000:]}")
+    payload = json.loads(out.stdout.strip().splitlines()[-1])
+    for r in payload["rows"]:
+        emit(f"sharded_n{r['n']}", r["solve_s"] * 1e6,
+             f"{r['per_query_us']:.3f}us/query")
+    emit("sharded_json", 0.0, OUT_PATH)
+
+
+if __name__ == "__main__":
+    if "--child" in sys.argv:
+        _child()
+    else:
+        run()

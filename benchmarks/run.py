@@ -26,6 +26,7 @@ MODULES = [
     ("routing", "benchmarks.bench_routing"),   # writes BENCH_routing.json
     ("retrieval", "benchmarks.bench_retrieval"),  # writes BENCH_retrieval.json
     ("streaming", "benchmarks.bench_streaming"),  # writes BENCH_streaming.json
+    ("sharded", "benchmarks.bench_sharded"),      # writes BENCH_sharded.json
     ("roofline", "benchmarks.bench_roofline"),
 ]
 

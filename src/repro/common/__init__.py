@@ -5,6 +5,9 @@ from .sharding import (  # noqa: F401
     base_rules,
     logical_shard,
     named_sharding,
+    query_axis_info,
+    query_mesh,
+    query_rules,
     use_mesh,
 )
 from .params import (  # noqa: F401

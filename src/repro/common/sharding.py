@@ -143,9 +143,59 @@ def base_rules(multi_pod: bool = False, *, fsdp: bool = True,
         "models": None,
         "db_rows": "model",
         "db_dim": None,
+        # mesh-sharded dual solver (ISSUE 6): the routing problem's query
+        # axis.  Single-pod shards queries over 'data'; multi-pod extends the
+        # SAME rule to ('pod','data') — the solver's gather/psum reductions
+        # take the axis tuple straight from this table, so moving from one
+        # pod to many is a rules change, not a solver change.
+        "query": dp,
     }
     if attn_policy == "seq_sp":
         # attention projections stay FSDP-sharded on the embed dim, heads replicated
         rules["p_heads"] = None
         rules["p_kv_heads"] = None
     return ShardingRules(rules=rules)
+
+
+# ---------------------------------------------------------------------------
+# Query-sharded routing mesh (ISSUE 6).
+# ---------------------------------------------------------------------------
+
+def query_mesh(n_devices: int = 0) -> Mesh:
+    """1-D ('data',) mesh over the host's devices for query-sharded routing.
+
+    The routing plane has no model parallelism — the per-model axis (M ~ 6)
+    is tiny — so the whole device pool goes to the query axis.  Pass
+    ``n_devices`` to use a prefix of the pool (0 = all)."""
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    return Mesh(devs[:n], ("data",))
+
+
+def query_rules(multi_pod: bool = False) -> ShardingRules:
+    """Minimal rule table for the routing plane: queries sharded, everything
+    else (models axis, VectorStore) replicated.  ``base_rules`` carries the
+    same ``"query"`` entry for full-system meshes."""
+    dp = ("pod", "data") if multi_pod else ("data",)
+    return ShardingRules(rules={"query": dp, "queries": dp, "models": None,
+                                "db_rows": None, "db_dim": None})
+
+
+def query_axis_info():
+    """(mesh, physical axes tuple, total size) for the active 'query' logical
+    axis, or None when no mesh context shards queries.  This is the single
+    hook the dual solver uses to decide whether to shard_map a solve."""
+    mesh, rules = _CTX.mesh, _CTX.rules
+    if mesh is None or rules is None:
+        return None
+    axes = rules.mesh_axes("query")
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    if size <= 1:
+        return None
+    return mesh, tuple(axes), size

@@ -58,6 +58,45 @@ class RouteBatch:
                           - np.asarray(self.counts, float), 0.0)
 
 
+def pad_bucket(n: int, multiple: int = 1) -> int:
+    """Smallest ``multiple * 2^k`` (plain ``2^k`` when multiple is 1) that
+    holds ``n`` queries.  Streaming windows padded to these buckets compile
+    O(log N) distinct shapes instead of one jit per window size, and every
+    bucket divides evenly across ``multiple`` query shards."""
+    n = max(1, int(n))
+    if multiple <= 1:
+        return 1 << (n - 1).bit_length()
+    b = multiple
+    while b < n:
+        b <<= 1
+    return b
+
+
+def pad_batch(batch: RouteBatch, n_pad: int) -> RouteBatch:
+    """Extend a batch to ``n_pad`` rows with inert padding (empty queries,
+    zero lengths / ground truth).  Callers must pass the original row count
+    as ``n_valid`` so the solver masks the padding out of every ledger sum
+    (the blocked solve additionally zeroes the padded cost/quality rows, so
+    the pad CONTENT provably cannot leak into the result)."""
+    extra = n_pad - batch.n
+    if extra <= 0:
+        return batch
+
+    def rows(a):
+        if a is None:
+            return None
+        a = np.asarray(a)
+        return np.concatenate([a, np.zeros((extra,) + a.shape[1:], a.dtype)])
+
+    return RouteBatch(
+        queries=list(batch.queries) + [""] * extra,
+        input_len=rows(batch.input_len),
+        price_in=batch.price_in, price_out=batch.price_out,
+        loads=batch.loads, counts=batch.counts,
+        cost_true=rows(batch.cost_true),
+        correct_true=rows(batch.correct_true))
+
+
 class Policy:
     name = "base"
     needs_truth = False   # True -> producers must fill cost_true/correct_true
@@ -70,13 +109,16 @@ class Policy:
         raise NotImplementedError
 
     def route_window(self, batch: RouteBatch, state, *, share: float = 1.0,
-                     rng=None):
+                     rng=None, n_valid: Optional[int] = None):
         """Streaming contract: route one arrival window, threading the
         stream state (an :class:`repro.core.optimizer.DualState` for the
         dual controller).  Stateless policies — every baseline — ignore the
         state and ``share`` (this window's fraction of the remaining
         horizon) and just delegate to :meth:`route`; ``OmniRouter``
-        overrides this with the warm-started windowed solver."""
+        overrides this with the warm-started windowed solver.  ``n_valid``
+        marks the valid-row prefix of a padded window (see ``pad_batch``);
+        the caller slices the assignment back, so stateless policies may
+        simply route the whole padded batch."""
         return self.route(batch, rng=rng), state
 
 

@@ -44,7 +44,7 @@ from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
-from .baselines import Policy
+from .baselines import Policy, pad_batch, pad_bucket
 from .optimizer import DualState
 
 
@@ -96,13 +96,14 @@ class StreamController:
         state and route it — the one admission/routing path shared by the
         simulator and the engine.
 
-        Known limitation (inherited from the one-shot ``route`` path): the
-        router's fused jit compiles once per distinct window SIZE, so
-        irregular window sizes pay compile time on first sight.
-        ``benchmarks/bench_streaming.py`` pads windows to powers of two;
-        doing the same here needs mask-aware ledger accounting in
-        ``route_window`` (quality-mode padding rows would drag the window
-        mean) — see the ROADMAP open item.
+        Policies that declare ``pads_windows`` (the dual controller, whose
+        ``route_window`` carries a mask-aware ledger) get their windows
+        padded to power-of-two buckets — multiples of the policy's
+        ``window_multiple()`` under a query mesh, so sharded windows divide
+        evenly across devices — and the padded rows are masked out via
+        ``n_valid`` and sliced off the returned assignment.  The fused
+        window jit therefore compiles O(log N) distinct shapes instead of
+        one per window size.
 
         Ledger caveat: ``route_window`` charges the ledger for every query
         it ROUTES; a query the executor then rejects (no capacity) and
@@ -115,10 +116,20 @@ class StreamController:
             batch = ds_like.route_batch(
                 np.asarray(loads, float), counts,
                 with_truth=getattr(self.policy, "needs_truth", False))
-            n_rem = max(self.horizon - self.routed, batch.n)
-            x, self.state = self.policy.route_window(
-                batch, self.state, share=batch.n / n_rem, rng=self.rng)
-            n_routed = batch.n
+            n_true = batch.n
+            n_rem = max(self.horizon - self.routed, n_true)
+            if getattr(self.policy, "pads_windows", False):
+                mult = getattr(self.policy, "window_multiple",
+                               lambda: 1)()
+                batch = pad_batch(batch, pad_bucket(n_true, mult))
+                x, self.state = self.policy.route_window(
+                    batch, self.state, share=n_true / n_rem, rng=self.rng,
+                    n_valid=n_true)
+                x = np.asarray(x)[:n_true]
+            else:
+                x, self.state = self.policy.route_window(
+                    batch, self.state, share=n_true / n_rem, rng=self.rng)
+            n_routed = n_true
         else:
             from .scheduler import route_via_batch
             x = route_via_batch(self.policy, ds_like, loads, counts,

@@ -39,12 +39,13 @@ records how many iterations actually ran.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+from functools import lru_cache, partial
 from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 
 class SolveInfo(NamedTuple):
@@ -106,9 +107,14 @@ def fold_threshold(mode: str, threshold, state: Optional[DualState], n: int,
     return jnp.clip(threshold + state.sr_deficit / n, 0.0, 1.0)
 
 
-def _mode_params(cost, quality, threshold, lr_con, *, budget_mode: bool):
-    """Map (cost, quality, threshold) onto the unified (A, B, t, lr)."""
-    n = cost.shape[0]
+def _mode_params(cost, quality, threshold, lr_con, *, budget_mode: bool,
+                 n_eff=None):
+    """Map (cost, quality, threshold) onto the unified (A, B, t, lr).
+
+    ``n_eff`` overrides the static row count in quality mode's 1/N scaling —
+    a mask-padded window normalizes by its VALID rows, not its padded shape
+    (padding rows carry zeros and must not dilute the window mean)."""
+    n = cost.shape[0] if n_eff is None else n_eff
     if budget_mode:
         return -quality, cost, threshold, lr_con
     return cost, -quality / n, -threshold, lr_con * n
@@ -243,6 +249,282 @@ def _solve_ref(cost, quality, threshold, loads, lam0=0.0, lam20=None,
     return x, info
 
 
+# ---------------------------------------------------------------------------
+# Mesh-sharded / blocked window solve (ISSUE 6).
+#
+# The only cross-query coupling in the dual ascent is the per-iteration
+# reduction [ΣA, ΣB, histogram].  ``shards`` turns that reduction into a
+# BLOCKED one: the (N, M) problem is viewed as (S, N/S, M), each shard
+# produces its contiguous partial sums, and the partials combine through one
+# ordered (S,)-array sum.  Under an active mesh whose rules map the logical
+# "query" axis to real devices, the identical program runs through
+# ``shard_map``: each device computes its local shard partials, an ordered
+# ``all_gather`` (a psum with a deterministic combine order) collects the
+# (S,) partial vector, and every device applies the same local sum — so the
+# multipliers (λ, λ2) stay replicated, every device walks the identical
+# ascent trajectory, and the sharded solve is BIT-IDENTICAL to the blocked
+# single-device solve.  (Every per-block partial is produced by a lax.map
+# body of fixed (N/S, M) shape so XLA cannot pick an lblocks-dependent
+# summation order — see ``bmap`` below.)  Repair/polish run shard-locally
+# (lax.map over local shards on one device == one shard per device under
+# shard_map) against an exact integer partition of the capacity vector, so
+# no collective is needed inside their while_loops.
+#
+# The same path carries the mask-aware window padding: ``n_valid`` marks the
+# valid-row prefix of a padded window; padding rows are zeroed out of every
+# matrix, masked out of every histogram, excluded from repair/polish moves,
+# and therefore never touch the quality/budget ledger.
+# ---------------------------------------------------------------------------
+
+def _shard_quotas(loads, shard_ids, gshards: int):
+    """Exact integer partition of per-model capacity across query shards:
+    quota_j(s) = floor(L_j·(s+1)/S) − floor(L_j·s/S).  Sums to floor(L_j)
+    over shards, is deterministic, and evaluates identically whether all
+    shards are computed on one device or one shard per device."""
+    s = shard_ids.astype(jnp.float32)[:, None]
+    g = jnp.float32(gshards)
+    hi = jnp.floor(loads[None, :] * ((s + 1.0) / g))
+    lo = jnp.floor(loads[None, :] * (s / g))
+    return jnp.where(jnp.isfinite(loads)[None, :], hi - lo, loads[None, :])
+
+
+def _blocked_window_core(a_mat, b_mat, cost, quality, t_eff, p_eff, loads,
+                         lr_eff, lr_load_eff, lam0, lam20, stall_tol, step0,
+                         n_valid, *, mode: str, iters: int,
+                         patience: int, lblocks: int, gshards: int,
+                         axis_name, use_stats_kernel: bool, bq: int,
+                         polish: bool, norm_grad: bool, lr_con: float,
+                         lr_load: float):
+    """Dual ascent (+ optional repair/polish + ledger sums) over ``lblocks``
+    local query shards.  Runs as-is on one device (lblocks == gshards) and
+    inside ``shard_map`` (lblocks == gshards / n_devices, ``axis_name`` set);
+    both paths produce bit-identical trajectories — see the block comment
+    above.  Returns (x_local, SolveInfo, final csum, final qsum)."""
+    nloc, m = a_mat.shape
+    nl = nloc // lblocks
+    d0 = 0 if axis_name is None else jax.lax.axis_index(axis_name) * lblocks
+    shard_ids = d0 + jnp.arange(lblocks)
+    # per-shard valid-row counts: padding is always a suffix of the GLOBAL
+    # window, so shard s owns rows [s·nl, (s+1)·nl) and clips against it
+    nv_loc = jnp.clip(n_valid - shard_ids.astype(jnp.float32) * nl, 0.0, nl)
+    a3 = a_mat.reshape(lblocks, nl, m)
+    b3 = b_mat.reshape(lblocks, nl, m)
+    c3 = cost.reshape(lblocks, nl, m)
+    q3 = quality.reshape(lblocks, nl, m)
+    nv_loc_i = nv_loc.astype(jnp.int32)
+    cols2 = jax.lax.broadcasted_iota(jnp.int32, (nl, m), 1)
+    rows2 = jax.lax.broadcasted_iota(jnp.int32, (nl, m), 0)
+
+    def gather(part):
+        # deterministic-order psum: device partials concatenate in global
+        # shard order, then every device applies the same ordered local sum
+        # — the op sequence the blocked single-device path runs verbatim
+        if axis_name is None:
+            return part
+        return jax.lax.all_gather(part, axis_name, tiled=True)
+
+    def bmap(f, *arrs):
+        # Per-block partials MUST come from a traced body whose shape is the
+        # same (nl, m) on every path — a direct `.sum(axis=(1, 2))` over the
+        # (lblocks, ...) stack lets XLA pick a summation order that depends
+        # on lblocks (and fuse it with the cross-block combine), which
+        # breaks mesh/meshless bit-parity at the ~1e-6 level.  lax.map is a
+        # hard loop boundary: the block body compiles once, identically,
+        # and the cross-block combine always sees materialized partials.
+        return jax.lax.map(lambda t: f(*t), arrs)
+
+    def block_onehot(x1, nv_s):
+        return ((x1[:, None] == cols2) & (rows2 < nv_s)).astype(jnp.float32)
+
+    def chosen(mat3, x2):
+        part = bmap(lambda mat2, x1, nv_s:
+                    (mat2 * block_onehot(x1, nv_s)).sum(),
+                    mat3, x2, nv_loc_i)
+        return gather(part).sum()
+
+    # Scale-free conditioning (the _normalize_problem convention) computed
+    # HERE, with the blocked gather, rather than outside the shard_map: a
+    # global jnp.sum outside would hand the reduction to the SPMD
+    # partitioner, whose device-split summation order differs from the
+    # single-device one — the ~1e-6 λ drift that breaks bit-parity.
+    a_bar = b_bar = jnp.float32(1.0)
+    if norm_grad:
+        denom = n_valid * jnp.float32(m) + jnp.float32(1e-30)
+        a_bar = gather(bmap(lambda a2: jnp.abs(a2).sum(), a3)).sum() \
+            / denom + jnp.float32(1e-30)
+        b_bar = gather(bmap(lambda b2: jnp.abs(b2).sum(), b3)).sum() \
+            / denom + jnp.float32(1e-30)
+        a_mat, b_mat = a_mat / a_bar, b_mat / b_bar
+        a3, b3 = a3 / a_bar, b3 / b_bar
+        t_eff = t_eff / b_bar
+        lr_eff = jnp.float32(lr_con) / (1.0 + jnp.abs(t_eff))
+        lr_load_eff = jnp.float32(lr_load) / (1.0 + jnp.mean(loads))
+        lam0 = lam0 * b_bar / a_bar
+        lam20 = lam20 / a_bar
+
+    def assign(lam, lam2):
+        scores = a3 + lam * b3 + lam2[None, None, :]
+        return jnp.argmin(scores, axis=2).astype(jnp.int32)
+
+    if use_stats_kernel:
+        from repro.kernels.lagrangian_assign.kernel import shard_stats
+
+        def stats(lam, lam2):
+            part = shard_stats(a_mat, b_mat, lam, lam2, nv_loc,
+                               lblocks=lblocks, bq=bq)
+            tot = gather(part).sum(axis=0)
+            return tot[0], tot[1], tot[2:]
+    else:
+        def stats(lam, lam2):
+            def one(a2, b2, nv_s):
+                scores = a2 + lam * b2 + lam2[None, :]
+                oh = block_onehot(
+                    jnp.argmin(scores, axis=1).astype(jnp.int32), nv_s)
+                return (a2 * oh).sum(), (b2 * oh).sum(), oh.sum(axis=0)
+            pa, pb, pc = bmap(one, a3, b3, nv_loc_i)
+            return gather(pa).sum(), gather(pb).sum(), gather(pc).sum(axis=0)
+
+    # no N-sized state crosses an iteration (the fused-kernel discipline):
+    # the loop banks the best-feasible iterate's MULTIPLIERS and the caller
+    # replays its assignment — argmin is deterministic
+    def cond(carry):
+        t = carry[0]
+        stall = carry[7]
+        return (t < iters) & (stall < patience)
+
+    def body(carry):
+        t, lam, lam2, best_a, lam_b, lam2_b, found, stall = carry
+        asum, bsum, cnt = stats(lam, lam2)
+        feasible = (bsum <= t_eff) & jnp.all(cnt <= loads)
+        better = feasible & (asum < best_a)
+        best_a = jnp.where(better, asum, best_a)
+        lam_b = jnp.where(better, lam, lam_b)
+        lam2_b = jnp.where(better, lam2, lam2_b)
+        found = found | feasible
+        step = 1.0 / jnp.sqrt(1.0 + step0 + t.astype(jnp.float32))
+        lam_new = jnp.maximum(lam + lr_eff * step * (bsum - t_eff), 0.0)
+        lam2_new = jnp.maximum(
+            lam2 + lr_load_eff * step * (cnt - loads), 0.0)
+        delta = jnp.abs(lam_new - lam) + jnp.abs(lam2_new - lam2).sum()
+        denom = 1.0 + jnp.abs(lam_new) + jnp.abs(lam2_new).sum()
+        resid = jnp.abs(bsum - t_eff) / (1.0 + jnp.abs(t_eff))
+        stalled = found & ((delta < stall_tol * denom)
+                           | (resid < stall_tol))
+        stall = stall + stalled.astype(jnp.int32)   # cumulative — see _solve_ref
+        return t + 1, lam_new, lam2_new, best_a, lam_b, lam2_b, found, stall
+
+    init = (jnp.asarray(0, jnp.int32),
+            jnp.asarray(lam0, jnp.float32).reshape(()),
+            jnp.asarray(lam20, jnp.float32).reshape((m,)),
+            jnp.asarray(jnp.inf), jnp.zeros(()), jnp.zeros((m,)),
+            jnp.asarray(False), jnp.asarray(0, jnp.int32))
+    (t_run, lam, lam2, best_a, lam_b, lam2_b, found, _
+     ) = jax.lax.while_loop(cond, body, init)
+
+    lam_sel = jnp.where(found, lam_b, lam)
+    lam2_sel = jnp.where(found, lam2_b, lam2)
+    x2 = assign(lam_sel, lam2_sel)
+    asum_e = chosen(a3, x2)
+    counts = gather(bmap(lambda x1, nv_s: block_onehot(x1, nv_s).sum(axis=0),
+                         x2, nv_loc_i)).sum(axis=0)
+    info = SolveInfo(
+        lam=lam * a_bar / b_bar, lam_load=lam2 * a_bar, feasible=found,
+        cost=chosen(c3, x2),
+        quality=chosen(q3, x2) / jnp.maximum(n_valid, 1.0),
+        counts=counts,
+        objective=jnp.where(found, best_a, asum_e) * a_bar,
+        iters_run=t_run)
+
+    if polish:
+        quotas = _shard_quotas(loads, shard_ids, gshards)
+        lam1 = (lam * a_bar / b_bar if mode == "quality"
+                else jnp.zeros(()))
+        # shard-local repair/polish through the same lax.map boundary (a
+        # vmap over the block axis would re-batch their inner reductions
+        # with lblocks-dependent shapes — same bit-parity hazard as stats)
+        shares = p_eff * nv_loc / jnp.maximum(n_valid, 1.0)
+
+        def one_polish(x1, c2, q2, quota, nv_s, share_s):
+            x1 = repair_workload(x1, c2, q2, quota, lam1, nv_s)
+            if mode == "quality":
+                return primal_polish(x1, c2, q2, p_eff, quota, nv_s)
+            # each shard polishes toward its valid-row share of the budget
+            return budget_polish(x1, c2, q2, share_s, quota, nv_s)
+
+        x2 = jax.lax.map(lambda t: one_polish(*t),
+                         (x2, c3, q3, quotas, nv_loc, shares))
+    csum = chosen(c3, x2)
+    qsum = chosen(q3, x2)
+    return x2.reshape(nloc), info, csum, qsum
+
+
+@lru_cache(maxsize=None)
+def _blocked_window_fn(mesh, axes, *, mode: str, iters: int, lr_con: float,
+                       lr_load: float, patience: int, norm_grad: bool,
+                       gshards: int, use_stats_kernel: bool, bq: int,
+                       polish: bool):
+    """Build (and cache per (mesh, statics)) the jitted blocked/sharded
+    window solve.  ``mesh``/``axes`` of None compiles the single-device
+    blocked program; otherwise the core runs under ``shard_map`` with the
+    query axis split over ``axes`` (single-pod ('data',) or multi-pod
+    ('pod','data') — straight from the sharding rules)."""
+    budget_mode = mode == "budget"
+    axis_name = None
+    lblocks = gshards
+    if mesh is not None:
+        axis_name = axes if len(axes) > 1 else axes[0]
+        ndev = 1
+        for a in axes:
+            ndev *= mesh.shape[a]
+        lblocks = gshards // ndev
+    core = partial(_blocked_window_core, mode=mode, iters=iters,
+                   patience=patience, lblocks=lblocks, gshards=gshards,
+                   axis_name=axis_name, use_stats_kernel=use_stats_kernel,
+                   bq=bq, polish=polish, norm_grad=norm_grad,
+                   lr_con=lr_con, lr_load=lr_load)
+
+    def fn(cost, quality, threshold, loads, lam0, lam20, stall_tol, step0,
+           n_valid, p_eff):
+        n, m = cost.shape
+        cost = jnp.asarray(cost, jnp.float32)
+        quality = jnp.asarray(quality, jnp.float32)
+        loads = jnp.asarray(loads, jnp.float32)
+        nvf = jnp.asarray(n_valid, jnp.float32)
+        # padding rows (always a suffix) are zeroed so they contribute
+        # exactly 0.0 to every reduction — including the stream ledger
+        validr = (jnp.arange(n) < nvf)[:, None]
+        cost = cost * validr
+        quality = quality * validr
+        a_mat, b_mat, t_eff, lr_eff = _mode_params(
+            cost, quality, jnp.asarray(threshold, jnp.float32), lr_con,
+            budget_mode=budget_mode, n_eff=nvf)
+        lam0 = jnp.asarray(lam0, jnp.float32)
+        lam20 = jnp.asarray(lam20, jnp.float32).reshape((m,))
+        lr_load_eff = jnp.asarray(lr_load, jnp.float32)
+        # norm_grad conditioning happens INSIDE the core (blocked gather) so
+        # its reductions are bit-identical with and without the mesh
+        args = (a_mat, b_mat, cost, quality, t_eff,
+                jnp.asarray(p_eff, jnp.float32), loads, lr_eff, lr_load_eff,
+                lam0, lam20, jnp.asarray(stall_tol, jnp.float32),
+                jnp.asarray(step0, jnp.float32), nvf)
+        if mesh is None:
+            return core(*args)
+        from jax.experimental.shard_map import shard_map
+        qspec = P(axes if len(axes) > 1 else axes[0])
+        rep = P()
+        sharded = shard_map(
+            core, mesh=mesh,
+            in_specs=(qspec, qspec, qspec, qspec) + (rep,) * 10,
+            out_specs=(qspec, SolveInfo(*([rep] * 8)), rep, rep),
+            # the while_loop's gathered reductions keep (λ, λ2) replicated
+            # by construction; the static replication checker can't see
+            # through the loop, so it is disabled rather than appeased
+            check_rep=False)
+        return sharded(*args)
+
+    return jax.jit(fn)
+
+
 @dataclasses.dataclass(frozen=True)
 class DualSolver:
     """One device-resident dual solver for both routing modes.
@@ -260,26 +542,80 @@ class DualSolver:
     stall_tol: float = 0.0         # >0: early-exit on multiplier stall
     stall_patience: int = 3        # cumulative stalled iters before exit
     norm_grad: bool = False        # scale-free subgradient (streaming)
+    shards: int = 1                # blocked stats reduction over the query
+    #                                axis; under an active "query" mesh the
+    #                                same blocks run one-per-device via
+    #                                shard_map, bit-identical to shards on
+    #                                one device (see the block comment above
+    #                                _blocked_window_core)
 
     def __post_init__(self):
         if self.mode not in ("quality", "budget"):
             raise ValueError(f"unknown solver mode: {self.mode!r}")
+        if self.shards < 1:
+            raise ValueError(f"shards must be >= 1: {self.shards}")
+
+    # -- sharded/blocked dispatch ---------------------------------------------
+    def _plan(self):
+        """(mesh, axes, global shard count) honouring an active query mesh.
+
+        No mesh (or no "query" rule): blocked single-device execution with
+        ``self.shards`` blocks.  Active query mesh of D devices: the shard
+        count adopts D (when ``shards`` is 1) or must be a multiple of it —
+        each device then runs shards/D contiguous blocks."""
+        from repro.common.sharding import query_axis_info
+        qa = query_axis_info()
+        if qa is None:
+            return None, None, self.shards
+        mesh, axes, d = qa
+        gsh = self.shards if self.shards > 1 else d
+        if gsh % d:
+            raise ValueError(
+                f"DualSolver.shards={gsh} must be a multiple of the active "
+                f"query-mesh size {d}")
+        return mesh, axes, gsh
+
+    def _blocked_fn(self, mesh, axes, gshards: int, polish: bool):
+        return _blocked_window_fn(
+            mesh, axes, mode=self.mode, iters=self.iters,
+            lr_con=self.lr_constraint, lr_load=self.lr_workload,
+            patience=self.stall_patience, norm_grad=self.norm_grad,
+            gshards=gshards, use_stats_kernel=self.use_kernel,
+            bq=self.block_q, polish=polish)
+
+    @staticmethod
+    def _check_divisible(n: int, gshards: int):
+        if n % gshards:
+            raise ValueError(
+                f"window size {n} does not divide into {gshards} query "
+                f"shards — pad the window (StreamController pads to "
+                f"power-of-two buckets and passes n_valid)")
 
     def solve(self, cost, quality, threshold, loads,
-              state: Optional[DualState] = None
+              state: Optional[DualState] = None, n_valid=None
               ) -> Tuple[jax.Array, SolveInfo]:
         """cost/quality (N, M) -> (assignment (N,), SolveInfo).
 
         ``state`` warm-starts the dual ascent from a previous window's
         multipliers (``threshold`` is used as given — ledger folding is
-        ``route_window``'s job)."""
-        m = cost.shape[1]
+        ``route_window``'s job).  ``n_valid`` marks the valid-row prefix of
+        a padded window (padding rows are masked out of every reduction)."""
+        n, m = np.shape(cost)
         lam0 = jnp.zeros(()) if state is None else state.lam
         lam20 = jnp.zeros((m,)) if state is None else state.lam_load
         # continue the stream's step schedule, but keep a step floor
         # (~1/20) so a drifting workload can still move the multipliers
         step0 = (jnp.zeros(()) if state is None
                  else jnp.minimum(state.steps, 400.0))
+        mesh, axes, gsh = self._plan()
+        if mesh is not None or gsh > 1 or n_valid is not None:
+            self._check_divisible(n, gsh)
+            fn = self._blocked_fn(mesh, axes, gsh, polish=False)
+            x, info, _, _ = fn(jnp.asarray(cost), jnp.asarray(quality),
+                               threshold, jnp.asarray(loads), lam0, lam20,
+                               self.stall_tol, step0,
+                               n if n_valid is None else n_valid, threshold)
+            return x, info
         if self.use_kernel:
             from repro.kernels.lagrangian_assign.ops import solve_fused
             return solve_fused(cost, quality, threshold, loads,
@@ -331,9 +667,28 @@ class DualSolver:
 
     def route_arrays(self, cost, quality, threshold, loads,
                      polish_threshold=None,
-                     state: Optional[DualState] = None
+                     state: Optional[DualState] = None, n_valid=None
                      ) -> Tuple[jax.Array, SolveInfo]:
-        """Full device pipeline: solve -> workload repair -> primal polish."""
+        """Full device pipeline: solve -> workload repair -> primal polish.
+
+        Blocked/sharded solves (``shards`` > 1, an active query mesh, or a
+        masked window) run repair/polish shard-locally against an exact
+        capacity partition inside the same fused program."""
+        mesh, axes, gsh = self._plan()
+        if mesh is not None or gsh > 1 or n_valid is not None:
+            n, m = np.shape(cost)
+            self._check_divisible(n, gsh)
+            lam0 = jnp.zeros(()) if state is None else state.lam
+            lam20 = jnp.zeros((m,)) if state is None else state.lam_load
+            step0 = (jnp.zeros(()) if state is None
+                     else jnp.minimum(state.steps, 400.0))
+            pt = threshold if polish_threshold is None else polish_threshold
+            fn = self._blocked_fn(mesh, axes, gsh, polish=True)
+            x, info, _, _ = fn(jnp.asarray(cost), jnp.asarray(quality),
+                               threshold, jnp.asarray(loads), lam0, lam20,
+                               self.stall_tol, step0,
+                               n if n_valid is None else n_valid, pt)
+            return x, info
         x, info = self.solve(cost, quality, threshold, loads, state=state)
         cost = jnp.asarray(cost, jnp.float32)
         quality = jnp.asarray(quality, jnp.float32)
@@ -351,7 +706,7 @@ class DualSolver:
 
     def route_window(self, cost, quality, threshold, loads,
                      state: Optional[DualState] = None, *, share=1.0,
-                     polish_margin: float = 0.0
+                     polish_margin: float = 0.0, n_valid=None
                      ) -> Tuple[jax.Array, SolveInfo, DualState]:
         """One streaming window: fold the cumulative ledger into this
         window's effective threshold, warm-start the ascent from the carried
@@ -359,8 +714,12 @@ class DualSolver:
 
         ``threshold`` is the GLOBAL constraint (stream budget B, or α);
         ``share`` is the window's fraction of the remaining horizon (budget
-        mode only).  All ops are jnp, so the whole method traces into one
-        jit (the router fuses predict→route_window into a single boundary).
+        mode only).  ``n_valid`` marks the valid-row prefix of a padded
+        window — padding rows never touch the ledger (their cost/quality
+        are zeroed and masked from every sum), so a power-of-two-padded
+        stream charges exactly what it routed.  All ops are jnp, so the
+        whole method traces into one jit (the router fuses
+        predict→route_window into a single boundary).
         """
         cost = jnp.asarray(cost, jnp.float32)
         quality = jnp.asarray(quality, jnp.float32)
@@ -369,17 +728,26 @@ class DualSolver:
         if state is None:
             state = init_dual_state(m)
         threshold = jnp.asarray(threshold, jnp.float32)
-        t_eff = fold_threshold(self.mode, threshold, state, n, share)
+        nv = n if n_valid is None else n_valid
+        t_eff = fold_threshold(self.mode, threshold, state, nv, share)
         if self.mode == "quality":
             p_eff = jnp.clip(t_eff + polish_margin, 0.0, 1.0)
         else:
             p_eff = t_eff
-        x, info = self.route_arrays(cost, quality, t_eff, loads,
-                                    polish_threshold=p_eff, state=state)
-        # ledger update uses the FINAL (repaired + polished) assignment
-        csum = _chosen_sum(cost, x)
-        qsum = _chosen_sum(quality, x)
-        deficit = (threshold * n - qsum) if self.mode == "quality" else 0.0
+        mesh, axes, gsh = self._plan()
+        if mesh is not None or gsh > 1 or n_valid is not None:
+            self._check_divisible(n, gsh)
+            fn = self._blocked_fn(mesh, axes, gsh, polish=True)
+            x, info, csum, qsum = fn(
+                cost, quality, t_eff, loads, state.lam, state.lam_load,
+                self.stall_tol, jnp.minimum(state.steps, 400.0), nv, p_eff)
+        else:
+            x, info = self.route_arrays(cost, quality, t_eff, loads,
+                                        polish_threshold=p_eff, state=state)
+            # ledger update uses the FINAL (repaired + polished) assignment
+            csum = _chosen_sum(cost, x)
+            qsum = _chosen_sum(quality, x)
+        deficit = (threshold * nv - qsum) if self.mode == "quality" else 0.0
         new_state = DualState(
             lam=info.lam, lam_load=info.lam_load,
             budget_spent=state.budget_spent + csum,
@@ -409,11 +777,13 @@ def solve_budget(cost, quality, budget, loads, *, iters: int = 150,
 # --- device-resident post-solve feasibility pass ------------------------------
 
 @jax.jit
-def repair_workload(x, cost, quality, loads, lam1=0.0):
+def repair_workload(x, cost, quality, loads, lam1=0.0, n_valid=None):
     """Enforce Σ_i x_ij <= L_j exactly by moving the cheapest-to-move queries
     off overloaded models (the scheduler must never violate concurrency
     limits).  One move per ``while_loop`` iteration: pick the most overloaded
     model, move its lowest-regret query to that query's best free model.
+    ``n_valid`` (mask-padded windows) excludes padding rows — a suffix — from
+    both the workload histogram and the move candidates.
     NumPy oracle: ``repro.kernels.lagrangian_assign.ref.repair_workload_ref``.
     """
     n, m = cost.shape
@@ -422,8 +792,14 @@ def repair_workload(x, cost, quality, loads, lam1=0.0):
     quality = jnp.asarray(quality, jnp.float32)
     loads = jnp.asarray(loads, jnp.float32)
     reduced = cost - lam1 * quality / n
-    counts0 = jnp.zeros((m,), jnp.float32).at[x].add(1.0)
     inf = jnp.float32(jnp.inf)
+    if n_valid is None:
+        validr = None
+        counts0 = jnp.zeros((m,), jnp.float32).at[x].add(1.0)
+    else:
+        validr = jnp.arange(n) < n_valid
+        counts0 = jnp.zeros((m,), jnp.float32).at[x].add(
+            validr.astype(jnp.float32))
 
     def cond(carry):
         _, _, done, k = carry
@@ -438,7 +814,8 @@ def repair_workload(x, cost, quality, loads, lam1=0.0):
         alt = jnp.where(free[None, :], reduced, inf)
         best_alt = jnp.argmin(alt, axis=1)
         alt_min = jnp.take_along_axis(alt, best_alt[:, None], axis=1)[:, 0]
-        delta = jnp.where(x == j, alt_min - reduced[:, j], inf)
+        movable = (x == j) if validr is None else ((x == j) & validr)
+        delta = jnp.where(movable, alt_min - reduced[:, j], inf)
         qi = jnp.argmin(delta)
         nj = best_alt[qi]
         do = (over[j] > 0) & jnp.any(free)   # saturated pool -> give up
@@ -454,22 +831,35 @@ def repair_workload(x, cost, quality, loads, lam1=0.0):
 
 
 @jax.jit
-def primal_polish(x, cost, quality, alpha, loads):
+def primal_polish(x, cost, quality, alpha, loads, n_valid=None):
     """Greedy primal improvement, fully on device.  Phase 0 restores quality
     feasibility (best quality-gain-per-dollar moves); phase 1 is steepest-
     descent cost reduction (apply the single largest saving whose quality
     delta fits the constraint slack and whose target has capacity, until no
     improving move remains).  Closes most of the subgradient method's duality
-    gap.  NumPy oracle: ``...lagrangian_assign.ref.primal_polish_ref``."""
+    gap.  ``n_valid`` (mask-padded windows) excludes the padding suffix from
+    the histogram, the quality target (nv·α, not n·α) and the move pool.
+    NumPy oracle: ``...lagrangian_assign.ref.primal_polish_ref``."""
     n, m = cost.shape
     x = jnp.asarray(x, jnp.int32)
     cost = jnp.asarray(cost, jnp.float32)
     quality = jnp.asarray(quality, jnp.float32)
     loads = jnp.asarray(loads, jnp.float32)
-    counts0 = jnp.zeros((m,), jnp.float32).at[x].add(1.0)
-    qsum0 = jnp.take_along_axis(quality, x[:, None], axis=1).sum()
     ninf = jnp.float32(-jnp.inf)
     inf = jnp.float32(jnp.inf)
+    if n_valid is None:
+        nv = n
+        validc = None
+        counts0 = jnp.zeros((m,), jnp.float32).at[x].add(1.0)
+        qsum0 = jnp.take_along_axis(quality, x[:, None], axis=1).sum()
+    else:
+        nv = n_valid
+        validr = jnp.arange(n) < n_valid
+        validc = validr[:, None]
+        vf = validr.astype(jnp.float32)
+        counts0 = jnp.zeros((m,), jnp.float32).at[x].add(vf)
+        qsum0 = (jnp.take_along_axis(quality, x[:, None], axis=1)[:, 0]
+                 * vf).sum()
 
     def apply_move(x, counts, qsum, i, j, do):
         dq = quality[i, j] - quality[i, x[i]]
@@ -481,7 +871,7 @@ def primal_polish(x, cost, quality, alpha, loads):
     # phase 0 — restore quality feasibility if the dual left us short
     def cond0(carry):
         _, _, qsum, done, k = carry
-        return (qsum < n * alpha - 1e-9) & (~done) & (k < 4 * n)
+        return (qsum < nv * alpha - 1e-9) & (~done) & (k < 4 * n)
 
     def body0(carry):
         x, counts, qsum, _, k = carry
@@ -490,6 +880,8 @@ def primal_polish(x, cost, quality, alpha, loads):
         gain = quality - curq
         extra = cost - curc
         ok = (gain > 1e-12) & (counts[None, :] < loads[None, :])
+        if validc is not None:
+            ok = ok & validc
         score = jnp.where(ok, gain / jnp.maximum(extra, 1e-9), ninf)
         flat = jnp.argmax(score)
         i, j = flat // m, flat % m
@@ -509,11 +901,13 @@ def primal_polish(x, cost, quality, alpha, loads):
         x, counts, qsum, _, k = carry
         curq = jnp.take_along_axis(quality, x[:, None], axis=1)
         curc = jnp.take_along_axis(cost, x[:, None], axis=1)
-        slack = qsum - n * alpha
+        slack = qsum - nv * alpha
         delta = cost - curc                   # <0 == cheaper
         dq = quality - curq
         ok = (delta < -1e-12) & (counts[None, :] < loads[None, :]) & \
             (dq >= -slack - 1e-12)
+        if validc is not None:
+            ok = ok & validc
         score = jnp.where(ok, delta, inf)
         flat = jnp.argmin(score)
         i, j = flat // m, flat % m
@@ -527,23 +921,34 @@ def primal_polish(x, cost, quality, alpha, loads):
 
 
 @jax.jit
-def budget_polish(x, cost, quality, budget, loads):
+def budget_polish(x, cost, quality, budget, loads, n_valid=None):
     """Budget-mode primal improvement (symmetric to ``primal_polish``).
 
     Phase 0 restores budget feasibility when the dual left us over budget
     (e.g. an infeasible B): repeatedly apply the cost-reducing move that
     loses the least quality per dollar saved.  Phase 1 is steepest quality
     ascent — apply the single largest quality gain whose extra cost fits the
-    remaining budget and whose target model has capacity.
+    remaining budget and whose target model has capacity.  ``n_valid``
+    (mask-padded windows) excludes the padding suffix from the histogram and
+    the move pool.
     NumPy oracle: ``...lagrangian_assign.ref.budget_polish_ref``."""
     n, m = cost.shape
     x = jnp.asarray(x, jnp.int32)
     cost = jnp.asarray(cost, jnp.float32)
     quality = jnp.asarray(quality, jnp.float32)
     loads = jnp.asarray(loads, jnp.float32)
-    counts0 = jnp.zeros((m,), jnp.float32).at[x].add(1.0)
-    csum0 = jnp.take_along_axis(cost, x[:, None], axis=1).sum()
     ninf = jnp.float32(-jnp.inf)
+    if n_valid is None:
+        validc = None
+        counts0 = jnp.zeros((m,), jnp.float32).at[x].add(1.0)
+        csum0 = jnp.take_along_axis(cost, x[:, None], axis=1).sum()
+    else:
+        validr = jnp.arange(n) < n_valid
+        validc = validr[:, None]
+        vf = validr.astype(jnp.float32)
+        counts0 = jnp.zeros((m,), jnp.float32).at[x].add(vf)
+        csum0 = (jnp.take_along_axis(cost, x[:, None], axis=1)[:, 0]
+                 * vf).sum()
 
     def apply_move(x, counts, csum, i, j, do):
         dc = cost[i, j] - cost[i, x[i]]
@@ -563,6 +968,8 @@ def budget_polish(x, cost, quality, budget, loads):
         dq = quality - curq
         dc = cost - curc
         ok = (dc < -1e-12) & (counts[None, :] < loads[None, :])
+        if validc is not None:
+            ok = ok & validc
         # least quality lost per dollar saved
         score = jnp.where(ok, dq / jnp.maximum(-dc, 1e-9), ninf)
         flat = jnp.argmax(score)
@@ -586,6 +993,8 @@ def budget_polish(x, cost, quality, budget, loads):
         dc = cost - curc
         ok = (dq > 1e-12) & (counts[None, :] < loads[None, :]) & \
             (csum + dc <= budget + 1e-9)
+        if validc is not None:
+            ok = ok & validc
         score = jnp.where(ok, dq, ninf)
         flat = jnp.argmax(score)
         i, j = flat // m, flat % m

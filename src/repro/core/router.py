@@ -59,6 +59,11 @@ class RouterConfig:
     lr_stream: float = 3.0
     stall_tol: float = 0.01
     stall_patience: int = 3
+    # query-axis shards for the streaming solver (ISSUE 6): >1 runs the
+    # blocked dual solve on one device; under an active "query" mesh the
+    # same blocks spread one-per-device via shard_map, bit-identical to the
+    # single-device blocked solve.  1 adopts the mesh size automatically.
+    shards: int = 1
 
 
 class OmniRouter(Policy):
@@ -81,13 +86,16 @@ class OmniRouter(Policy):
             mode=mode, iters=cfg.iters, lr_constraint=cfg.lr_stream,
             lr_workload=cfg.lr_workload, use_kernel=cfg.use_assign_kernel,
             stall_tol=cfg.stall_tol, stall_patience=cfg.stall_patience,
-            norm_grad=True)
+            norm_grad=True, shards=cfg.shards)
         self.route_seconds = 0.0    # scheduling-overhead accounting (Fig. 3)
         self.predict_seconds = 0.0
         self.dual_iters = 0         # total streaming dual iterations run
         self.windows = 0            # streaming windows routed
-        self._fused_route = None    # jitted predict→solve, built lazily
-        self._fused_window = None   # jitted predict→window-solve (streaming)
+        # jitted predict→solve programs, keyed by (kind, solver plan,
+        # masked?): the solver dispatches blocked-vs-legacy and
+        # mesh-vs-local at TRACE time, so a fused program built without a
+        # mesh must not be reused after one is activated (and vice versa)
+        self._fused: dict = {}
 
     def prepare(self, train_ds: QAServe):
         return self
@@ -108,42 +116,111 @@ class OmniRouter(Policy):
         return (self.cfg.alpha,
                 min(self.cfg.alpha + self.cfg.alpha_margin, 1.0))
 
-    def _build_fused(self):
-        predictor, solver = self.predictor, self.solver
+    # -- mesh-sharded prediction (ISSUE 6) -----------------------------------
+    def _sharded_predict(self, plan):
+        """The predict stage, spread over the query mesh when one is active:
+        featurization, head inference and the retrieval vote are all
+        per-query, so each device runs them on its local query shard with
+        the predictor state (encoder params, VectorStore) REPLICATED — no
+        collective is needed.  Without a mesh this is predict_device
+        itself."""
+        predictor = self.predictor
+        mesh, axes, _ = plan
+
+        def predict(inputs, tokens, input_len, price_in, price_out):
+            cap, _, cost = predictor.predict_device(
+                inputs, tokens, input_len, price_in, price_out)
+            return cap, cost
+
+        if mesh is None:
+            return predict
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        qspec = P(axes if len(axes) > 1 else axes[0])
+        rep = P()
+
+        def sharded(inputs, tokens, input_len, price_in, price_out):
+            in_specs = (jax.tree_util.tree_map(lambda _: rep, inputs),
+                        qspec, qspec, rep, rep)
+            return shard_map(predict, mesh=mesh, in_specs=in_specs,
+                             out_specs=(qspec, qspec), check_rep=False)(
+                inputs, tokens, input_len, price_in, price_out)
+
+        return sharded
+
+    def _fused_fn(self, kind: str, masked: bool = False):
+        """Fetch (or build) the jitted predict→solve program for the
+        CURRENT solver plan (mesh / shard count) and window masking."""
+        solver = self.stream_solver if kind == "window" else self.solver
+        plan = solver._plan()
+        key = (kind, plan[0], plan[1], plan[2], masked)
+        fn = self._fused.get(key)
+        if fn is None:
+            build = (self._build_fused_window if kind == "window"
+                     else self._build_fused)
+            fn = self._fused[key] = build(plan, masked)
+        return fn
+
+    def _build_fused(self, plan, masked: bool):
+        solver = self.solver
+        predict = self._sharded_predict(plan)
 
         def fused(inputs, tokens, input_len, price_in, price_out, avail,
                   threshold, polish_threshold):
-            cap, _, cost = predictor.predict_device(
-                inputs, tokens, input_len, price_in, price_out)
+            cap, cost = predict(inputs, tokens, input_len, price_in,
+                                price_out)
             return solver.route_arrays(cost, cap, threshold, avail,
                                        polish_threshold=polish_threshold)
 
         return jax.jit(fused)
 
-    def _build_fused_window(self):
-        predictor, solver = self.predictor, self.stream_solver
+    def _build_fused_window(self, plan, masked: bool):
+        solver = self.stream_solver
         margin = self.cfg.alpha_margin
+        predict = self._sharded_predict(plan)
 
         def fused(inputs, tokens, input_len, price_in, price_out, avail,
-                  threshold, state, share):
-            cap, _, cost = predictor.predict_device(
-                inputs, tokens, input_len, price_in, price_out)
+                  threshold, state, share, n_valid=None):
+            cap, cost = predict(inputs, tokens, input_len, price_in,
+                                price_out)
             return solver.route_window(cost, cap, threshold, avail, state,
-                                       share=share, polish_margin=margin)
+                                       share=share, polish_margin=margin,
+                                       n_valid=n_valid)
 
-        return jax.jit(fused)
+        if masked:
+            return jax.jit(fused)
+
+        def unmasked(inputs, tokens, input_len, price_in, price_out, avail,
+                     threshold, state, share):
+            return fused(inputs, tokens, input_len, price_in, price_out,
+                         avail, threshold, state, share)
+
+        return jax.jit(unmasked)
 
     def route(self, batch: RouteBatch, rng=None) -> np.ndarray:
         if hasattr(self.predictor, "predict_device"):
             return self._route_device(batch)
         return self._route_hostpredict(batch)
 
+    # StreamController opt-in: pad arrival windows to power-of-two buckets
+    # (multiples of the shard count under a mesh) and pass n_valid, so the
+    # fused window jit compiles O(log N) shapes and sharded windows divide
+    # evenly across devices.
+    pads_windows = True
+
+    def window_multiple(self) -> int:
+        """Bucket sizes must divide into this many query shards."""
+        return self.stream_solver._plan()[2]
+
     def route_window(self, batch: RouteBatch, state: Optional[DualState],
-                     *, share: float = 1.0, rng=None):
+                     *, share: float = 1.0, rng=None,
+                     n_valid: Optional[int] = None):
         """Streaming window: predict → warm-started windowed solve, with
         the DualState threaded through the SAME single jit boundary as the
         one-shot path (state in, state out — no host round-trip between the
-        predictor and the solver).  Returns ``(assignment, new_state)``."""
+        predictor and the solver).  ``n_valid`` marks the valid-row prefix
+        of a padded window (padding rows are masked out of the ledger).
+        Returns ``(assignment, new_state)``."""
         if state is None:
             state = init_dual_state(batch.m)
         threshold = (self.cfg.budget if self.cfg.budget is not None
@@ -154,16 +231,17 @@ class OmniRouter(Policy):
                 batch.queries, self.predictor.token_len))
             t1 = time.perf_counter()
             self.predict_seconds += t1 - t0
-            if self._fused_window is None:
-                self._fused_window = self._build_fused_window()
-            x, info, state = self._fused_window(
-                self.predictor.device_inputs(), toks,
-                jnp.asarray(batch.input_len, jnp.float32),
-                jnp.asarray(batch.price_in, jnp.float32),
-                jnp.asarray(batch.price_out, jnp.float32),
-                jnp.asarray(batch.available, jnp.float32),
-                jnp.asarray(threshold, jnp.float32), state,
-                jnp.asarray(share, jnp.float32))
+            fn = self._fused_fn("window", masked=n_valid is not None)
+            args = [self.predictor.device_inputs(), toks,
+                    jnp.asarray(batch.input_len, jnp.float32),
+                    jnp.asarray(batch.price_in, jnp.float32),
+                    jnp.asarray(batch.price_out, jnp.float32),
+                    jnp.asarray(batch.available, jnp.float32),
+                    jnp.asarray(threshold, jnp.float32), state,
+                    jnp.asarray(share, jnp.float32)]
+            if n_valid is not None:
+                args.append(jnp.asarray(n_valid, jnp.float32))
+            x, info, state = fn(*args)
         else:
             t0 = time.perf_counter()
             cap, _, cost = self.predictor.predict_arrays(batch)
@@ -172,7 +250,7 @@ class OmniRouter(Policy):
             x, info, state = self.stream_solver.route_window(
                 jnp.asarray(cost), jnp.asarray(cap), threshold,
                 jnp.asarray(batch.available), state, share=share,
-                polish_margin=self.cfg.alpha_margin)
+                polish_margin=self.cfg.alpha_margin, n_valid=n_valid)
         x = np.asarray(x)
         self.dual_iters += int(info.iters_run)
         self.windows += 1
@@ -186,10 +264,8 @@ class OmniRouter(Policy):
             batch.queries, self.predictor.token_len))
         t1 = time.perf_counter()
         self.predict_seconds += t1 - t0
-        if self._fused_route is None:
-            self._fused_route = self._build_fused()
         threshold, polish_threshold = self._thresholds()
-        x, _ = self._fused_route(
+        x, _ = self._fused_fn("route")(
             self.predictor.device_inputs(), toks,
             jnp.asarray(batch.input_len, jnp.float32),
             jnp.asarray(batch.price_in, jnp.float32),

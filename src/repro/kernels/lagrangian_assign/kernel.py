@@ -326,6 +326,78 @@ def fused_dual_solve(a_mat, b_mat, thresh, loads, *, iters: int = 150,
     return out, nb
 
 
+def _shard_stats_kernel(scal_ref, ab_ref, aux_ref, out_ref, *,
+                        m: int, bq: int, bps: int):
+    """One dual-ascent iteration's statistics, accumulated PER SHARD.
+
+    The mesh-sharded solver (ISSUE 6) cannot run the whole ascent loop in
+    one launch — the dual update needs a cross-device reduction every
+    iteration — so the sharded ``use_kernel`` path calls this kernel once
+    per iteration: grid = (shards * blocks_per_shard,), each block adds its
+    argmin assignment's [ΣA, ΣB, histogram] into its shard's output row.
+    Per-shard accumulation is sequential in grid order, so the partials are
+    bit-identical whether all shards run on one device (blocked reference)
+    or each device handles one shard under ``shard_map``.
+
+    scal = [λ, nv_0..nv_{S-1}] (per-shard valid-row counts — rows at or past
+    a shard's bound are padding and touch nothing); aux row 0 = λ2."""
+    b = pl.program_id(0)
+    s = b // bps
+    lam = scal_ref[0]
+    bound = scal_ref[1 + s].astype(jnp.int32)
+    lam2 = aux_ref[0, :]
+
+    @pl.when(b % bps == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ab = ab_ref[...].astype(jnp.float32)                     # (bq, 2m)
+    a = ab[:, :m]
+    bm = ab[:, m:]
+    scores = a + lam * bm + lam2[None, :]
+    x = jnp.argmin(scores, axis=1).astype(jnp.int32)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bq, m), 1)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bq, m), 0)
+    onehot = (x[:, None] == cols) & (((b % bps) * bq + rows) < bound)
+    ohf = onehot.astype(jnp.float32)
+    out_ref[0, 0] += (a * ohf).sum()
+    out_ref[0, 1] += (bm * ohf).sum()
+    out_ref[0, pl.ds(2, m)] += ohf.sum(axis=0)
+
+
+def shard_stats(a_mat, b_mat, lam, lam2, nv, *, lblocks: int, bq: int = 256,
+                interpret: Optional[bool] = None):
+    """Per-shard [ΣA, ΣB, histogram] partials for one dual iteration.
+
+    a_mat/b_mat (lblocks*nl, M) — ``lblocks`` contiguous query shards; nv
+    (lblocks,) per-shard valid-row counts.  Returns (lblocks, 2+M) f32."""
+    nloc, m = a_mat.shape
+    nl = nloc // lblocks
+    bq = min(bq, nl)
+    pad = (-nl) % bq
+    ab = jnp.concatenate([a_mat, b_mat], axis=1).reshape(lblocks, nl, 2 * m)
+    if pad:
+        ab = jnp.concatenate(
+            [ab, jnp.zeros((lblocks, pad, 2 * m), ab.dtype)], axis=1)
+    ab = ab.reshape(lblocks * (nl + pad), 2 * m)
+    bps = (nl + pad) // bq
+    scal = jnp.concatenate([jnp.reshape(lam, (1,)),
+                            jnp.asarray(nv, jnp.float32)]).astype(jnp.float32)
+    kernel = functools.partial(_shard_stats_kernel, m=m, bq=bq, bps=bps)
+    return pl.pallas_call(
+        kernel,
+        grid=(lblocks * bps,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),               # λ | nv per shard
+            pl.BlockSpec((bq, 2 * m), lambda i: (i, 0)),     # A | B packed
+            pl.BlockSpec((1, m), lambda i: (0, 0)),          # λ2
+        ],
+        out_specs=pl.BlockSpec((1, 2 + m), lambda i: (i // bps, 0)),
+        out_shape=jax.ShapeDtypeStruct((lblocks, 2 + m), jnp.float32),
+        interpret=backend_interpret(interpret),
+    )(scal, ab, jnp.asarray(lam2, jnp.float32)[None, :])
+
+
 def _step_kernel(c_ref, a_ref, lam_ref, x_ref, cnt_ref, sums_ref, *,
                  n: int, m: int, bq: int):
     iq = pl.program_id(0)

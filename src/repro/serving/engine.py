@@ -88,6 +88,7 @@ class Request:
     started: float = 0.0
     finished: float = 0.0
     hedged: bool = False
+    admit_step: float = 0.0      # engine clock (decode chunk) at admission
 
 
 class PageAllocator:
@@ -183,6 +184,29 @@ class Endpoint:
 
     def has_capacity(self) -> bool:
         return bool(self.alloc.free_slots)
+
+    def active_requests(self) -> List[Request]:
+        return [r for r in self.slot_req if r is not None]
+
+    def cancel(self, req: Request) -> bool:
+        """Release a still-decoding request's slot and pages (hedging: the
+        sibling copy finished first).  Must only run between chunks — the
+        freed block-table row is zeroed so the slot's masked in-flight
+        writes land on the dump page, and the slot immediately becomes
+        admissible again."""
+        for slot, r in enumerate(self.slot_req):
+            if r is req:
+                self.slot_req[slot] = None
+                self.block_table[slot] = 0
+                self.lens[slot] = 0
+                self.remaining[slot] = 0
+                self.last_tokens[slot, 0] = 0
+                if self._has_kv:
+                    self.alloc.release_pages(self._slot_pages[slot])
+                    self._slot_pages[slot] = []
+                self.alloc.release_slot(slot)
+                return True
+        return False
 
     def can_serve(self, req: Request) -> bool:
         """Whether the request fits this endpoint's fixed shapes at all:
@@ -341,6 +365,19 @@ class RestartEndpoint:
     def has_capacity(self) -> bool:
         return len(self.active) < self.L
 
+    def active_requests(self) -> List[Request]:
+        return list(self.active)
+
+    def cancel(self, req: Request) -> bool:
+        """Drop a still-decoding request (hedging); restart-batching means
+        the survivors pay one more re-prefill."""
+        for k, r in enumerate(self.active):
+            if r is req:
+                self.active.pop(k)
+                self._rebuild()
+                return True
+        return False
+
     def admit(self, req: Request):
         """Prefill the request and merge into the active batch by restarting
         (re-prefilling) the whole packed batch."""
@@ -439,6 +476,7 @@ class _EngineExecutor:
                 continue
             if ep.has_capacity():
                 req.endpoint = j
+                req.admit_step = float(self.steps)
                 ep.admit(req)
             else:  # paper's queueing: wait for capacity
                 rejected.append(req)
@@ -463,11 +501,87 @@ class _EngineExecutor:
             progressed = progressed or bool(fin) or bool(e.active_count())
             done.extend(fin)
         self.steps += 1
+        done = self._resolve_hedges(done)
         self.server.completed.extend(done)
         return done, progressed
 
     def tick(self):
-        pass
+        """Post-event hook (same slot as the simulator's): fire the hedge
+        policy.  Runs only between chunks — ``advance`` has synced every
+        endpoint — so cancelling/duplicating slots is race-free."""
+        self._maybe_hedge()
+
+    # -- hedging (``_SimExecutor._maybe_hedge`` semantics, engine clock) -------
+    def _pick_alt(self, primary: int, req: Request) -> Optional[int]:
+        """Least-loaded endpoint other than the primary that has a free slot
+        and fits the request's shapes."""
+        best, best_free = None, 0
+        for j, ep in enumerate(self.server.endpoints):
+            free = ep.L - ep.active_count()
+            if (j != primary and free > best_free and ep.has_capacity()
+                    and getattr(ep, "can_serve", lambda r: True)(req)):
+                best, best_free = j, free
+        return best
+
+    def _maybe_hedge(self):
+        """Duplicate un-hedged slow decodes: a request still in flight
+        ``hedge_after`` chunks past admission gets a sibling copy admitted
+        on the least-loaded alternate endpoint.  First finisher wins; the
+        straggler is cancelled at resolution (``_resolve_hedges``)."""
+        srv = self.server
+        if srv.hedge_after <= 0:
+            return
+        for i, ep in enumerate(srv.endpoints):
+            for req in ep.active_requests():
+                if (req.hedged or req.done
+                        or self.steps - req.admit_step < srv.hedge_after):
+                    continue
+                alt = self._pick_alt(i, req)
+                if alt is None:
+                    continue
+                shadow = dataclasses.replace(
+                    req, output=None, done=False, endpoint=alt, hedged=True,
+                    admit_step=float(self.steps))
+                req.hedged = True
+                srv._shadow_ids.add(id(shadow))
+                srv._hedges[req.rid] = (req, i, shadow, alt)
+                srv.endpoints[alt].admit(shadow)
+                srv.hedged += 1
+
+    def _resolve_hedges(self, done: List[Request]) -> List[Request]:
+        """First finisher wins: report the PRIMARY request (with the
+        winner's output/endpoint) exactly once and cancel the straggler
+        sibling, freeing its slot immediately."""
+        srv = self.server
+        if not srv._hedges and not srv._shadow_ids:
+            return done
+        out: List[Request] = []
+        for req in done:
+            pair = srv._hedges.get(req.rid)
+            if pair is None or (req is not pair[0] and req is not pair[2]):
+                if id(req) in srv._shadow_ids:
+                    srv._shadow_ids.discard(id(req))
+                    continue            # sibling already resolved: drop copy
+                out.append(req)
+                continue
+            primary, pi, shadow, si = pair
+            del srv._hedges[req.rid]
+            if req is shadow:
+                srv._shadow_ids.discard(id(shadow))
+                if primary.done:        # tie (same chunk): primary's own
+                    continue            # completion stands, drop the copy
+                srv.endpoints[pi].cancel(primary)
+                primary.output = shadow.output
+                primary.endpoint = shadow.endpoint
+                primary.done = True
+                primary.finished = shadow.finished
+                out.append(primary)
+            else:                       # primary won: kill the shadow
+                if not shadow.done:
+                    srv.endpoints[si].cancel(shadow)
+                    srv._shadow_ids.discard(id(shadow))
+                out.append(req)
+        return out
 
 
 class MultiLLMServer:
@@ -503,6 +617,9 @@ class MultiLLMServer:
         self.route_seconds = 0.0
         self.windows = 0
         self.dual_iters = 0
+        self.hedged = 0                      # hedge duplicates fired
+        self._hedges: dict = {}              # rid -> (primary, i, shadow, j)
+        self._shadow_ids: set = set()        # id() of live shadow copies
         self._controller: Optional[StreamController] = None
 
     def submit(self, req: Request, at_step: float = 0.0):

@@ -254,7 +254,7 @@ def test_route_is_single_jit_no_host_round_trip(hybrid, qaserve_splits):
     between the predictor and the solver."""
     _, _, test = qaserve_splits
     router = OmniRouter(hybrid, RouterConfig(alpha=0.7, iters=20))
-    fused = router._build_fused()
+    fused = router._fused_fn("route")
     inputs = hybrid.device_inputs()
 
     def trace(n):

@@ -221,3 +221,42 @@ def test_server_paged_matches_restart_engine():
     assert outs["paged"] == outs["restart"]
     assert stats["paged"] == 0
     assert stats["restart"] > 0        # the baseline restarts on every event
+
+
+@pytest.mark.slow
+def test_server_hedging_duplicates_and_cancels():
+    """``hedge_after_steps``: a request still decoding that many chunks past
+    admission is duplicated on the alternate endpoint; the first finisher
+    wins, the sibling is cancelled and its slot/pages are released.  The pool
+    decodes in lock-step, so the primary always wins here — outputs must be
+    identical to the unhedged run, every rid completes exactly once, and
+    both allocators drain back to full capacity."""
+    from repro.configs import get_smoke_config
+    from repro.core.baselines import BalanceAware
+    from repro.serving.engine import (Endpoint, MultiLLMServer, Request,
+                                      null_route_features)
+
+    rng = np.random.RandomState(3)
+    prompts = [rng.randint(1, 500, (9,)).astype(np.int32) for _ in range(3)]
+    outs = {}
+    for hedge in (0, 2):
+        eps = [Endpoint(dataclasses.replace(get_smoke_config(a),
+                                            dtype=jnp.float32),
+                        max_concurrency=2, t_max=64, page_size=8,
+                        sync_every=2, seed=i)
+               for i, a in enumerate(["h2o-danube-3-4b", "hymba-1.5b"])]
+        srv = MultiLLMServer(eps, BalanceAware(), batch_size=2,
+                             hedge_after_steps=hedge)
+        for i, p in enumerate(prompts):
+            srv.submit(Request(rid=i, tokens=p, max_new=12))
+        done = srv.run(null_route_features)
+        rids = [r.rid for r in done]
+        assert sorted(rids) == list(range(len(prompts)))   # once each
+        outs[hedge] = {r.rid: tuple(r.output) for r in done}
+        if hedge:
+            assert srv.hedged > 0                  # the policy actually fired
+            assert not srv._hedges and not srv._shadow_ids
+        for ep in eps:                             # cancel freed everything
+            assert len(ep.alloc.free_slots) == ep.L
+            assert len(ep.alloc.free_pages) == ep.alloc.n_pages - 1
+    assert outs[0] == outs[2]          # lock-step pool: primaries win
