@@ -93,15 +93,21 @@ def _race():
         tok0 = sum(e.decoded_tokens for e in eps_w)
         for i, (toks, max_new) in enumerate(work):
             srv.submit(Request(rid=1000 + i, tokens=toks, max_new=max_new))
-        t0 = time.perf_counter()
-        from repro.serving.engine import null_route_features
-        done = srv.run(null_route_features)
-        wall = time.perf_counter() - t0
-        assert len(done) == len(work)
         # guard against the compile-count instrumentation going dark (it
         # reads a private jax API): a warmed endpoint must show compiles,
-        # else the zero-retrace assertion below would pass vacuously
+        # else the zero-retrace guard below would pass vacuously
         assert all(c > 0 for c in compiles_before), compiles_before
+        from repro.common import CompileGuard
+        from repro.serving.engine import null_route_features
+        t0 = time.perf_counter()
+        # the paged contract: steady-state churn compiles NOTHING (the
+        # guard raises on any retrace); the restart engine retraces by
+        # design, so it is only measured
+        with CompileGuard(*eps_w, label=f"{name} engine steady state",
+                          max_retraces=0 if name == "paged" else None) as g:
+            done = srv.run(null_route_features)
+        wall = time.perf_counter() - t0
+        assert len(done) == len(work)
         compiles_after = [e.compile_count() for e in eps_w]
         tokens = sum(e.decoded_tokens for e in eps_w) - tok0
         results[name] = {
@@ -110,7 +116,7 @@ def _race():
             "tokens_per_s": tokens / max(wall, 1e-9),
             "compiles_before": compiles_before,
             "compiles_after": compiles_after,
-            "retraces_during_run": int(sum(compiles_after) - sum(compiles_before)),
+            "retraces_during_run": g.retraces(),
             "batch_reprefills": int(sum(e.batch_reprefills for e in eps_w)),
             "prefill_calls": int(sum(e.prefill_calls for e in eps_w)),
         }
@@ -123,7 +129,7 @@ def _race():
                / max(results["restart"]["tokens_per_s"], 1e-9))
     results["paged_vs_restart_speedup"] = speedup
     emit("serving_speedup", 0.0, f"paged_vs_restart={speedup:.2f}x")
-    # the paged contract: churn compiles nothing, restarts nothing
+    # zero paged retraces already enforced by the CompileGuard above
     assert results["paged"]["retraces_during_run"] == 0, results["paged"]
     assert results["paged"]["batch_reprefills"] == 0
     assert speedup >= 2.0, f"paged only {speedup:.2f}x vs restart"

@@ -80,7 +80,7 @@ def _run_stream(solver, cost, qual, B, loads, slices, *, warm: bool):
     m = cost.shape[1]
     state = None
     x_all = np.empty(n_total, int)
-    iters = 0
+    iters_pending = []
     t0 = time.perf_counter()
     routed = 0
     for idx in slices:
@@ -94,10 +94,14 @@ def _run_stream(solver, cost, qual, B, loads, slices, *, warm: bool):
             _pad_pow2(cost[idx], nw), _pad_pow2(qual[idx], nw),
             B, loads, st, share=share)
         x_all[idx] = np.asarray(x)[:nw]
-        iters += int(info.iters_run)
+        # device scalar: int() here would be a second host sync per window
+        # (SC01); the batch fetch below settles the count once
+        iters_pending.append(info.iters_run)
         routed += nw
     jax.block_until_ready(state.lam)
-    return x_all, iters, time.perf_counter() - t0
+    wall = time.perf_counter() - t0
+    iters = int(np.asarray(jnp.stack(iters_pending)).sum())
+    return x_all, iters, wall
 
 
 def run():
@@ -135,8 +139,13 @@ def run():
                                    ("cold", slices, False),
                                    ("greedy", g_slices, False)):
                 _run_stream(solver, cost, qual, B, loads, sl, warm=warm)
-                x, iters, wall = _run_stream(solver, cost, qual, B, loads,
-                                             sl, warm=warm)
+                # second pass is the steady state: the warmup run populated
+                # every jit cache (pow-2 padded shapes), so the timed run
+                # must compile NOTHING — CompileGuard raises otherwise
+                from repro.common import CompileGuard
+                with CompileGuard(label=f"streaming {name} steady state"):
+                    x, iters, wall = _run_stream(solver, cost, qual, B,
+                                                 loads, sl, warm=warm)
                 runs[name] = {
                     "sr": float(qual[np.arange(n), x].mean()),
                     "cost": float(cost[np.arange(n), x].sum()),

@@ -1,0 +1,36 @@
+"""repro.analysis.staticcheck — AST lint pass for the repo's recurring bug classes.
+
+Every PR so far has re-fought the same four bug families by hand: silent jit
+retraces under churn (PR 3 found 94 before the paged engine), implicit host
+syncs in hot control loops (PR 5's livelock), non-tile-multiple Pallas crashes
+(PR 2/3), and reduction re-association drifting the dual multipliers by 1 ulp
+per window (PR 6).  This package turns that folklore into mechanical checks:
+
+==== ===================================================================
+SC01 host-sync: ``.item()`` / ``float()/int()/bool()/np.asarray`` on
+     device values inside jit-reachable functions, Python ``if``/``while``
+     on tracer-valued expressions, and per-element scalar conversion
+     loops in dispatch paths.
+SC02 retrace-hazard: jit-wrapped functions taking str/bool/dict/config
+     params without ``static_argnames``, or reading mutable module state.
+SC03 kernel-contract: every ``kernels/<name>/`` ships ``kernel.py`` +
+     ``ref.py`` (NumPy oracle) + ``ops.py`` and has a parity test.
+SC04 unsafe-reduction: global reductions over the query-sharded axis
+     outside the blessed gather/blocked-map combine helpers.
+SC05 grid-contract: BlockSpec index-map arity must match grid rank;
+     bare tile-divisibility asserts must be padded/masked or justified.
+==== ===================================================================
+
+Suppress a finding with a trailing ``# staticcheck: ignore[SC0x]`` comment
+(on the flagged line, or alone on the line above).  The CLI
+(``python -m repro.analysis.staticcheck``) compares against a committed
+baseline file and exits nonzero on any NEW finding.
+
+This package is deliberately stdlib-only (``ast`` + ``re``): the CI gate
+runs it without installing jax.
+"""
+from __future__ import annotations
+
+from .core import Finding, load_baseline, new_findings, scan, write_baseline
+
+__all__ = ["Finding", "scan", "load_baseline", "new_findings", "write_baseline"]

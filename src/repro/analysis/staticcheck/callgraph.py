@@ -1,0 +1,222 @@
+"""Best-effort call graph over the scanned modules, rooted at jit/pallas sites.
+
+SC01's host-sync rule only makes sense inside code that runs under a trace:
+a ``float()`` in a CLI printout is fine, the same call inside a function a
+``jax.jit`` region calls is a device sync (or a tracer error waiting for a
+rarely-taken branch).  The graph is an over-approximation built from names:
+
+* roots: functions decorated with (or wrapped by a call to) ``jit`` /
+  ``pjit`` / ``shard_map``, plus the enclosing function of any
+  ``pallas_call`` launch;
+* edges: any Name or ``self.<attr>`` referenced inside a function that
+  resolves to a nested def, a sibling method, a module-level def, or an
+  explicitly imported def from another scanned module.
+
+Unresolvable references (attribute chains through objects, dynamic dispatch)
+are dropped, so reachability is conservative in the under-approximating
+direction: a miss means a violation goes unflagged, never a false positive
+in host-only code.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+
+WRAP_NAMES = {"jit", "pjit", "shard_map"}
+
+
+def mentions_jit(node: ast.AST) -> bool:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name) and n.id in WRAP_NAMES:
+            return True
+        if isinstance(n, ast.Attribute) and n.attr in WRAP_NAMES:
+            return True
+    return False
+
+
+def _call_name(func: ast.expr) -> str | None:
+    if isinstance(func, ast.Name):
+        return func.id
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    return None
+
+
+@dataclass
+class FuncInfo:
+    key: tuple[str, str]  # (module rel, dotted qualname)
+    node: ast.FunctionDef | ast.AsyncFunctionDef
+    module_rel: str
+    class_name: str | None
+    parent: tuple[str, str] | None
+    children: dict[str, tuple[str, str]] = field(default_factory=dict)
+    refs: set[str] = field(default_factory=set)  # Names + self-attr names
+    is_root: bool = False
+
+
+class _Collector(ast.NodeVisitor):
+    def __init__(self, rel: str, graph: "CallGraph"):
+        self.rel = rel
+        self.graph = graph
+        self.stack: list[FuncInfo] = []
+        self.class_stack: list[str] = []
+
+    def _visit_func(self, node):
+        qual = ".".join(
+            [*(f.key[1].rsplit(".", 1)[-1] for f in self.stack), node.name]
+        )
+        if self.class_stack and not self.stack:
+            qual = f"{self.class_stack[-1]}.{qual}"
+        info = FuncInfo(
+            key=(self.rel, qual),
+            node=node,
+            module_rel=self.rel,
+            class_name=self.class_stack[-1] if self.class_stack else None,
+            parent=self.stack[-1].key if self.stack else None,
+        )
+        self.graph.funcs[info.key] = info
+        self.graph.by_node[id(node)] = info
+        if self.stack:
+            self.stack[-1].children[node.name] = info.key
+        elif self.class_stack:
+            self.graph.methods.setdefault(
+                (self.rel, self.class_stack[-1], node.name), info.key
+            )
+        else:
+            self.graph.module_defs.setdefault((self.rel, node.name), info.key)
+        if any(mentions_jit(d) for d in node.decorator_list):
+            info.is_root = True
+        for dec in node.decorator_list:
+            self.visit(dec)
+        self.stack.append(info)
+        for child in ast.iter_child_nodes(node):
+            if child not in node.decorator_list:
+                self.visit(child)
+        self.stack.pop()
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+    def visit_ClassDef(self, node):
+        self.class_stack.append(node.name)
+        self.generic_visit(node)
+        self.class_stack.pop()
+
+    def visit_Name(self, node):
+        if self.stack:
+            self.stack[-1].refs.add(node.id)
+
+    def visit_Attribute(self, node):
+        if (
+            self.stack
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"
+        ):
+            self.stack[-1].refs.add(node.attr)
+        self.generic_visit(node)
+
+    def visit_Call(self, node):
+        name = _call_name(node.func)
+        if name in WRAP_NAMES:
+            # jit(f, ...) / shard_map(f, ...): everything named in the
+            # arguments is a trace root candidate.
+            for arg in [*node.args, *(kw.value for kw in node.keywords)]:
+                self.graph.root_refs.append((self.rel, self._scope(), arg))
+        if name == "pallas_call" and self.stack:
+            self.stack[-1].is_root = True
+        if name == "ImportFrom":  # pragma: no cover - defensive
+            pass
+        self.generic_visit(node)
+
+    def _scope(self) -> FuncInfo | None:
+        return self.stack[-1] if self.stack else None
+
+    def visit_ImportFrom(self, node):
+        if node.module:
+            for alias in node.names:
+                self.graph.imports.setdefault(self.rel, {})[
+                    alias.asname or alias.name
+                ] = (node.module, alias.name)
+        self.generic_visit(node)
+
+
+class CallGraph:
+    def __init__(self, modules):
+        self.funcs: dict[tuple[str, str], FuncInfo] = {}
+        self.by_node: dict[int, FuncInfo] = {}
+        self.module_defs: dict[tuple[str, str], tuple[str, str]] = {}
+        self.methods: dict[tuple[str, str, str], tuple[str, str]] = {}
+        self.imports: dict[str, dict[str, tuple[str, str]]] = {}
+        self.root_refs: list = []
+        # module dotted path -> rel, for resolving cross-module imports
+        self.mod_by_dotted: dict[str, str] = {}
+        for m in modules:
+            dotted = m.rel.removesuffix(".py").removesuffix("/__init__")
+            dotted = dotted.removeprefix("src/").replace("/", ".")
+            self.mod_by_dotted[dotted] = m.rel
+            _Collector(m.rel, self).visit(m.tree)
+        self._mark_call_roots()
+        self.reachable_keys = self._reach()
+
+    def _resolve(self, rel: str, scope: FuncInfo | None, name: str):
+        """Resolve a bare name seen in ``rel`` (inside ``scope``) to a func."""
+        s = scope
+        while s is not None:
+            if name in s.children:
+                return s.children[name]
+            s = self.funcs.get(s.parent) if s.parent else None
+        if scope is not None and scope.class_name:
+            meth = self.methods.get((rel, scope.class_name, name))
+            if meth:
+                return meth
+        if (rel, name) in self.module_defs:
+            return self.module_defs[(rel, name)]
+        imp = self.imports.get(rel, {}).get(name)
+        if imp:
+            src_mod, orig = imp
+            for dotted, target_rel in self.mod_by_dotted.items():
+                if dotted == src_mod or dotted.endswith("." + src_mod):
+                    hit = self.module_defs.get((target_rel, orig))
+                    if hit:
+                        return hit
+        return None
+
+    def _mark_call_roots(self):
+        for rel, scope, arg in self.root_refs:
+            for n in ast.walk(arg):
+                name = None
+                if isinstance(n, ast.Name):
+                    name = n.id
+                elif (
+                    isinstance(n, ast.Attribute)
+                    and isinstance(n.value, ast.Name)
+                    and n.value.id == "self"
+                ):
+                    name = n.attr
+                if name is None:
+                    continue
+                key = self._resolve(rel, scope, name)
+                if key is None and scope is None:
+                    # module-level jit(f): methods named f anywhere in module
+                    for (mrel, _cls, mname), mkey in self.methods.items():
+                        if mrel == rel and mname == name:
+                            self.funcs[mkey].is_root = True
+                if key:
+                    self.funcs[key].is_root = True
+
+    def _reach(self) -> set[tuple[str, str]]:
+        seen = {k for k, f in self.funcs.items() if f.is_root}
+        frontier = list(seen)
+        while frontier:
+            key = frontier.pop()
+            f = self.funcs[key]
+            for name in f.refs:
+                target = self._resolve(f.module_rel, f, name)
+                if target and target not in seen:
+                    seen.add(target)
+                    frontier.append(target)
+        return seen
+
+    def is_reachable(self, node: ast.AST) -> bool:
+        info = self.by_node.get(id(node))
+        return info is not None and info.key in self.reachable_keys

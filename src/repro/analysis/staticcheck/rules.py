@@ -1,0 +1,659 @@
+"""Rule implementations SC01-SC05.  Each returns a list of Findings.
+
+Messages are fixer-facing: they say what to change, not just what matched.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+
+from .callgraph import CallGraph, mentions_jit
+from .core import Finding, Module
+
+SCALAR_CASTS = {"float", "int", "bool"}
+SHAPE_ATTRS = {"shape", "ndim", "dtype", "size", "weak_type", "sharding"}
+STATIC_JNP_ATTRS = SHAPE_ATTRS | {"result_type", "issubdtype", "iinfo", "finfo"}
+TRACER_MODULES = {"jnp", "lax"}
+REDUCTIONS = {"sum", "mean", "dot"}
+COMBINE_PRIMS = {"all_gather", "psum", "psum_scatter", "pmean"}
+BLOCK_DIM_RE = re.compile(r"(^|_)(l|n)?blocks?$|(^|_)shards?$")
+CONFIG_ANN_RE = re.compile(r"Config$")
+HAZARD_ANNOTATIONS = {"str", "bool", "dict", "Dict", "list", "List", "set", "Set"}
+
+
+def _func_params(node: ast.FunctionDef | ast.AsyncFunctionDef) -> set[str]:
+    a = node.args
+    names = [p.arg for p in [*a.posonlyargs, *a.args, *a.kwonlyargs]]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return {n for n in names if n not in ("self", "cls")}
+
+
+def _attr_root(node: ast.expr) -> str | None:
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _names_outside_shape_ctx(expr: ast.expr) -> set[str]:
+    """Bare Names in ``expr``, skipping .shape/.dtype/len() style static reads."""
+    out: set[str] = set()
+
+    def walk(n: ast.AST) -> None:
+        if isinstance(n, ast.Attribute) and n.attr in SHAPE_ATTRS:
+            return
+        if isinstance(n, ast.Call):
+            fname = n.func.id if isinstance(n.func, ast.Name) else None
+            if fname == "len":
+                return
+            if isinstance(n.func, ast.Attribute) and n.func.attr in STATIC_JNP_ATTRS:
+                return
+        if isinstance(n, ast.Name):
+            out.add(n.id)
+        for c in ast.iter_child_nodes(n):
+            walk(c)
+
+    walk(expr)
+    return out
+
+
+def _call_name(node: ast.Call) -> str | None:
+    if isinstance(node.func, ast.Name):
+        return node.func.id
+    if isinstance(node.func, ast.Attribute):
+        return node.func.attr
+    return None
+
+
+# ---------------------------------------------------------------------------
+# SC01 host-sync
+# ---------------------------------------------------------------------------
+
+def _check_sc01(mod: Module, graph: CallGraph) -> list[Finding]:
+    findings: list[Finding] = []
+
+    def flag(node: ast.AST, msg: str) -> None:
+        findings.append(Finding(mod.rel, node.lineno, "SC01", msg))
+
+    # (a) .item() forces a device->host sync wherever it appears.
+    for n in ast.walk(mod.tree):
+        if (
+            isinstance(n, ast.Call)
+            and isinstance(n.func, ast.Attribute)
+            and n.func.attr == "item"
+            and not n.args
+        ):
+            flag(
+                n,
+                "`.item()` blocks on a device->host sync; keep the value on "
+                "device (or fetch the whole batch once with np.asarray).",
+            )
+
+    # (b) Python control flow on tracer-valued jnp/lax expressions.
+    for n in ast.walk(mod.tree):
+        test = None
+        if isinstance(n, (ast.If, ast.While, ast.IfExp)):
+            test = n.test
+        if test is None:
+            continue
+        for c in ast.walk(test):
+            if (
+                isinstance(c, ast.Call)
+                and isinstance(c.func, ast.Attribute)
+                and isinstance(c.func.value, ast.Name)
+                and c.func.value.id in TRACER_MODULES
+                and c.func.attr not in STATIC_JNP_ATTRS
+            ):
+                flag(
+                    n,
+                    f"Python branch on tracer-valued `{c.func.value.id}."
+                    f"{c.func.attr}(...)` syncs the host (and breaks under "
+                    "jit); use lax.cond / jnp.where or hoist the check.",
+                )
+                break
+
+    # (c) scalar casts / numpy materialisation of parameters inside functions
+    # reachable from a jit or pallas_call boundary.
+    for fnode in ast.walk(mod.tree):
+        if not isinstance(fnode, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if not graph.is_reachable(fnode):
+            continue
+        params = _func_params(fnode)
+        for n in ast.walk(fnode):
+            if not isinstance(n, ast.Call) or not n.args:
+                continue
+            is_cast = isinstance(n.func, ast.Name) and n.func.id in SCALAR_CASTS
+            is_np = (
+                isinstance(n.func, ast.Attribute)
+                and n.func.attr in ("asarray", "array")
+                and isinstance(n.func.value, ast.Name)
+                and n.func.value.id == "np"
+            )
+            if not (is_cast or is_np):
+                continue
+            hit = _names_outside_shape_ctx(n.args[0]) & params
+            if hit:
+                what = "np." + n.func.attr if is_np else _call_name(n) + "()"
+                flag(
+                    n,
+                    f"`{what}` on `{sorted(hit)[0]}` inside a jit-reachable "
+                    "function syncs the host per call; keep the math in jnp "
+                    "or move the conversion outside the traced region.",
+                )
+
+    # (d) per-element scalar conversion loops over device-backed iterables —
+    # the dispatch-path class: one device sync per element instead of one
+    # np.asarray for the batch.
+    for fnode in ast.walk(mod.tree):
+        if not isinstance(fnode, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        params = _func_params(fnode)
+        # `x = np.asarray(x)` before the loop is the fix: one batch fetch
+        converted = {
+            t.id
+            for n in ast.walk(fnode)
+            if isinstance(n, ast.Assign)
+            for t in n.targets
+            if isinstance(t, ast.Name)
+            and any(
+                isinstance(c, ast.Call)
+                and _call_name(c) in ("asarray", "array", "device_get", "tolist")
+                for c in ast.walk(n.value)
+            )
+        }
+        for loop in ast.walk(fnode):
+            if not isinstance(loop, ast.For):
+                continue
+            it_names = {
+                x.id for x in ast.walk(loop.iter) if isinstance(x, ast.Name)
+            }
+            if not it_names & params or it_names & converted:
+                continue
+            blessed = any(
+                isinstance(c, ast.Call)
+                and (
+                    _call_name(c) in ("asarray", "array", "device_get", "tolist",
+                                      "range", "enumerate")
+                )
+                for c in ast.walk(loop.iter)
+            )
+            if blessed:
+                continue
+            targets = {
+                t.id for t in ast.walk(loop.target) if isinstance(t, ast.Name)
+            }
+            for n in ast.walk(loop):
+                if (
+                    isinstance(n, ast.Call)
+                    and isinstance(n.func, ast.Name)
+                    and n.func.id in ("int", "float")
+                    and len(n.args) == 1
+                    and isinstance(n.args[0], ast.Name)
+                    and n.args[0].id in targets
+                ):
+                    flag(
+                        n,
+                        f"per-element `{n.func.id}()` in a loop over a "
+                        "parameter may sync the device once per item; hoist "
+                        "one `np.asarray(...)` above the loop.",
+                    )
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# SC02 retrace-hazard
+# ---------------------------------------------------------------------------
+
+def _jit_static_names(fnode: ast.FunctionDef | ast.AsyncFunctionDef):
+    """(is_jitted, static_names, static_nums) from the decorator list."""
+    jitted = False
+    names: set[str] = set()
+    nums: set[int] = set()
+    for dec in fnode.decorator_list:
+        if not mentions_jit(dec):
+            continue
+        jitted = True
+        for call in ast.walk(dec):
+            if not isinstance(call, ast.Call):
+                continue
+            for kw in call.keywords:
+                if kw.arg == "static_argnames":
+                    for c in ast.walk(kw.value):
+                        if isinstance(c, ast.Constant) and isinstance(c.value, str):
+                            names.add(c.value)
+                if kw.arg == "static_argnums":
+                    for c in ast.walk(kw.value):
+                        if isinstance(c, ast.Constant) and isinstance(c.value, int):
+                            nums.add(c.value)
+    return jitted, names, nums
+
+
+def _mutable_module_globals(tree: ast.Module) -> set[str]:
+    out: set[str] = set()
+    for stmt in tree.body:
+        targets: list[ast.expr] = []
+        if isinstance(stmt, ast.Assign):
+            targets, value = stmt.targets, stmt.value
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            targets, value = [stmt.target], stmt.value
+        else:
+            continue
+        mutable = isinstance(value, (ast.Dict, ast.List, ast.Set)) or (
+            isinstance(value, ast.Call)
+            and isinstance(value.func, ast.Name)
+            and value.func.id in ("dict", "list", "set")
+        )
+        if mutable:
+            for t in targets:
+                if isinstance(t, ast.Name):
+                    out.add(t.id)
+    return out
+
+
+def _check_sc02(mod: Module, graph: CallGraph) -> list[Finding]:
+    findings: list[Finding] = []
+    mutable_globals = _mutable_module_globals(mod.tree)
+    for fnode in ast.walk(mod.tree):
+        if not isinstance(fnode, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        jitted, static_names, static_nums = _jit_static_names(fnode)
+        if not jitted:
+            continue
+        a = fnode.args
+        ordered = [*a.posonlyargs, *a.args]
+        for idx, p in enumerate([*ordered, *a.kwonlyargs]):
+            if p.arg in ("self", "cls") or p.arg in static_names:
+                continue
+            if idx < len(ordered) and idx in static_nums:
+                continue
+            ann = p.annotation
+            ann_name = None
+            if isinstance(ann, ast.Name):
+                ann_name = ann.id
+            elif isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+                ann_name = ann.value
+            hazard = ann_name is not None and (
+                ann_name in HAZARD_ANNOTATIONS or CONFIG_ANN_RE.search(ann_name)
+            )
+            if hazard:
+                findings.append(
+                    Finding(
+                        mod.rel,
+                        fnode.lineno,
+                        "SC02",
+                        f"jit-wrapped `{fnode.name}` takes `{p.arg}: "
+                        f"{ann_name}` without static_argnames: every distinct "
+                        "value retraces (PR 3's churn class); mark it static "
+                        "or pass arrays.",
+                    )
+                )
+        # reading module-level mutable containers from inside a jitted body:
+        # the trace captures contents by value at trace time, silently.
+        body_names = {
+            n.id
+            for stmt in fnode.body
+            for n in ast.walk(stmt)
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)
+        }
+        local_names = _func_params(fnode) | {
+            n.id
+            for stmt in fnode.body
+            for n in ast.walk(stmt)
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Store)
+        }
+        for g in sorted((body_names - local_names) & mutable_globals):
+            findings.append(
+                Finding(
+                    mod.rel,
+                    fnode.lineno,
+                    "SC02",
+                    f"jit-wrapped `{fnode.name}` reads mutable module global "
+                    f"`{g}`: the trace freezes its contents and later "
+                    "mutations are silently ignored; pass it as an argument.",
+                )
+            )
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# SC04 unsafe-reduction
+# ---------------------------------------------------------------------------
+
+def _is_sharded_scope(fnode) -> bool:
+    if "axis_name" in _func_params(fnode):
+        return True
+    return any(
+        isinstance(n, ast.Call)
+        and isinstance(n.func, ast.Attribute)
+        and n.func.attr == "axis_index"
+        for n in ast.walk(fnode)
+    )
+
+
+def _check_sc04(mod: Module) -> list[Finding]:
+    findings: list[Finding] = []
+
+    scopes: list[ast.AST] = []
+
+    def find(node: ast.AST) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(
+                child, (ast.FunctionDef, ast.AsyncFunctionDef)
+            ) and _is_sharded_scope(child):
+                scopes.append(child)  # nested defs analysed within the scope
+            else:
+                find(child)
+
+    find(mod.tree)
+    for scope in scopes:
+        findings.extend(_check_sc04_scope(mod, scope))
+    return findings
+
+
+def _check_sc04_scope(mod: Module, scope) -> list[Finding]:
+    findings: list[Finding] = []
+
+    # local helpers: combine helpers hide an ordered cross-shard collective;
+    # map helpers carry the per-block loop (the hard jit boundary of PR 6).
+    combine_helpers: set[str] = set()
+    map_helpers: set[str] = {"map"}  # lax.map used directly
+    nested: dict[str, ast.AST] = {}
+    for n in ast.walk(scope):
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)) and n is not scope:
+            nested[n.name] = n
+            body_calls = {
+                _call_name(c) for c in ast.walk(n) if isinstance(c, ast.Call)
+            }
+            if body_calls & COMBINE_PRIMS:
+                combine_helpers.add(n.name)
+            if "map" in body_calls or "scan" in body_calls:
+                map_helpers.add(n.name)
+
+    # defs routed through a map helper run per block: their internal
+    # reductions are the blessed partials, not global combines.
+    map_routed: set[str] = set()
+    for n in ast.walk(scope):
+        if isinstance(n, ast.Call) and _call_name(n) in map_helpers:
+            for arg in n.args:
+                for c in ast.walk(arg):
+                    if isinstance(c, ast.Name) and c.id in nested:
+                        map_routed.add(c.id)
+
+    # taint: arrays reshaped into (blocks, ...) layout are the sharded-axis
+    # values; reductions over them must go through the combine helpers.
+    tainted: set[str] = set()
+    for n in ast.walk(scope):
+        if (
+            isinstance(n, ast.Call)
+            and isinstance(n.func, ast.Attribute)
+            and n.func.attr == "reshape"
+            and n.args
+        ):
+            first = n.args[0]
+            if isinstance(first, ast.Name) and BLOCK_DIM_RE.search(first.id):
+                root = _attr_root(n.func.value)
+                if root:
+                    tainted.add(root)
+    def names_outside_combine(node: ast.AST) -> set[str]:
+        # a combine helper's output is the ordered, replicated combine —
+        # values derived from it are clean, so taint stops at its call;
+        # likewise .shape/.dtype reads and len() are static, not data flow.
+        out: set[str] = set()
+        if isinstance(node, ast.Call) and _call_name(node) in combine_helpers:
+            return out
+        if isinstance(node, ast.Attribute) and node.attr in SHAPE_ATTRS:
+            return out
+        if isinstance(node, ast.Call) and (
+            isinstance(node.func, ast.Name) and node.func.id == "len"
+        ):
+            return out
+        if isinstance(node, ast.Name):
+            out.add(node.id)
+        for child in ast.iter_child_nodes(node):
+            out |= names_outside_combine(child)
+        return out
+
+    changed = True
+    while changed:
+        changed = False
+        for n in ast.walk(scope):
+            if not isinstance(n, (ast.Assign, ast.AugAssign)):
+                continue
+            value_names = names_outside_combine(n.value)
+            if not value_names & tainted:
+                continue
+            tgts = n.targets if isinstance(n, ast.Assign) else [n.target]
+            for t in tgts:
+                for c in ast.walk(t):
+                    if isinstance(c, ast.Name) and c.id not in tainted:
+                        tainted.add(c.id)
+                        changed = True
+    if not tainted:
+        return findings
+
+    skip_bodies = {
+        id(nested[name])
+        for name in (map_routed | combine_helpers)
+        if name in nested
+    }
+
+    def visit(node: ast.AST, in_map_arg: bool) -> None:
+        if id(node) in skip_bodies:
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            if in_map_arg and node is not scope:
+                return  # body runs per block under the map helper
+        if isinstance(node, ast.Call):
+            cname = _call_name(node)
+            if cname in map_helpers:
+                for child in ast.iter_child_nodes(node):
+                    visit(child, True)
+                return
+            reduction = None
+            operands: list[ast.expr] = []
+            if (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr in REDUCTIONS
+            ):
+                root = _attr_root(node.func.value)
+                if root in ("jnp", "np", "math", "lax"):
+                    if root in ("jnp", "np"):
+                        reduction = f"{root}.{node.func.attr}"
+                        operands = list(node.args)
+                else:
+                    reduction = f".{node.func.attr}()"
+                    operands = [node.func.value, *node.args]
+            if reduction is not None:
+                op_names = set()
+                for op in operands:
+                    op_names |= {
+                        c.id for c in ast.walk(op) if isinstance(c, ast.Name)
+                    }
+                gathered = any(
+                    isinstance(c, ast.Call) and _call_name(c) in combine_helpers
+                    for op in operands
+                    for c in ast.walk(op)
+                )
+                if op_names & tainted and not gathered:
+                    findings.append(
+                        Finding(
+                            mod.rel,
+                            node.lineno,
+                            "SC04",
+                            f"global `{reduction}` over sharded-axis value "
+                            f"`{sorted(op_names & tainted)[0]}` outside the "
+                            "blessed combine helpers: cross-shard reduction "
+                            "order is unspecified and drifts the dual ascent "
+                            "by 1 ulp per window (PR 6); gather per-block "
+                            "partials first.",
+                        )
+                    )
+        for child in ast.iter_child_nodes(node):
+            visit(child, in_map_arg)
+
+    visit(scope, False)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# SC05 grid-contract
+# ---------------------------------------------------------------------------
+
+def _grid_rank(call: ast.Call) -> int | None:
+    """Expected index-map arity for a pallas_call / PrefetchScalarGridSpec."""
+    grid = None
+    nsp = 0
+    for kw in call.keywords:
+        if kw.arg == "grid":
+            grid = kw.value
+        if kw.arg == "num_scalar_prefetch" and isinstance(kw.value, ast.Constant):
+            nsp = int(kw.value.value)
+    if grid is None:
+        return None
+    if isinstance(grid, ast.Tuple):
+        return len(grid.elts) + nsp
+    return None  # non-literal grid: arity unknown, skip
+
+
+def _check_sc05(mod: Module) -> list[Finding]:
+    findings: list[Finding] = []
+    for n in ast.walk(mod.tree):
+        if not isinstance(n, ast.Call):
+            continue
+        cname = _call_name(n)
+        if cname not in ("pallas_call", "PrefetchScalarGridSpec"):
+            continue
+        if cname == "pallas_call" and any(
+            kw.arg == "grid_spec" for kw in n.keywords
+        ):
+            continue  # specs live inside the grid_spec constructor
+        rank = _grid_rank(n)
+        if rank is None:
+            continue
+        for spec in ast.walk(n):
+            if not (isinstance(spec, ast.Call) and _call_name(spec) == "BlockSpec"):
+                continue
+            index_map = None
+            if len(spec.args) >= 2:
+                index_map = spec.args[1]
+            for kw in spec.keywords:
+                if kw.arg == "index_map":
+                    index_map = kw.value
+            if not isinstance(index_map, ast.Lambda):
+                continue
+            arity = len(index_map.args.args) + len(index_map.args.posonlyargs)
+            if arity != rank:
+                findings.append(
+                    Finding(
+                        mod.rel,
+                        index_map.lineno,
+                        "SC05",
+                        f"BlockSpec index map takes {arity} args but the grid "
+                        f"rank (plus scalar-prefetch operands) is {rank}; "
+                        "Pallas passes one program id per grid axis.",
+                    )
+                )
+
+    # bare tile-divisibility asserts crash on ragged inputs (the PR 2/3
+    # class); pad/mask, clamp the tile, or justify with an ignore comment.
+    for n in ast.walk(mod.tree):
+        if not isinstance(n, ast.Assert):
+            continue
+        for c in ast.walk(n.test):
+            is_mod_eq0 = (
+                isinstance(c, ast.Compare)
+                and isinstance(c.left, ast.BinOp)
+                and isinstance(c.left.op, ast.Mod)
+                and len(c.comparators) == 1
+                and isinstance(c.comparators[0], ast.Constant)
+                and c.comparators[0].value == 0
+            )
+            is_not_mod = (
+                isinstance(c, ast.UnaryOp)
+                and isinstance(c.op, ast.Not)
+                and isinstance(c.operand, ast.BinOp)
+                and isinstance(c.operand.op, ast.Mod)
+            )
+            if is_mod_eq0 or is_not_mod:
+                findings.append(
+                    Finding(
+                        mod.rel,
+                        n.lineno,
+                        "SC05",
+                        "bare divisibility assert crashes on non-tile-multiple "
+                        "shapes; pad+mask, clamp the tile to a divisor, or "
+                        "justify with `# staticcheck: ignore[SC05]`.",
+                    )
+                )
+                break
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# SC03 kernel-contract (tree-level)
+# ---------------------------------------------------------------------------
+
+KERNEL_DIR_RE = re.compile(r"(^|/)kernels/([^/]+)/[^/]+\.py$")
+
+
+def check_kernel_contract(modules: list[Module], repo_root: Path) -> list[Finding]:
+    findings: list[Finding] = []
+    kernel_dirs: dict[str, Path] = {}
+    for m in modules:
+        match = KERNEL_DIR_RE.search(m.rel)
+        if match:
+            kernel_dirs.setdefault(match.group(2), m.path.parent)
+
+    tests_dir = repo_root / "tests"
+    test_blob = ""
+    if tests_dir.is_dir():
+        test_blob = "\n".join(
+            p.read_text() for p in sorted(tests_dir.rglob("*.py"))
+        )
+
+    for name, kdir in sorted(kernel_dirs.items()):
+        rel_dir = kdir.relative_to(repo_root).as_posix() if kdir.is_relative_to(
+            repo_root
+        ) else kdir.as_posix()
+        for required, why in [
+            ("kernel.py", "the Pallas kernel"),
+            ("ref.py", "the NumPy oracle parity tests diff against"),
+            ("ops.py", "the backend-dispatching public entry point"),
+        ]:
+            if not (kdir / required).exists():
+                findings.append(
+                    Finding(
+                        f"{rel_dir}/{required}",
+                        1,
+                        "SC03",
+                        f"kernels/{name}/ is missing {required} ({why}); every "
+                        "kernel ships the kernel + ref + ops triplet.",
+                    )
+                )
+        if tests_dir.is_dir() and not re.search(
+            rf"kernels[./]{re.escape(name)}|kernels\s+import\s+{re.escape(name)}",
+            test_blob,
+        ):
+            findings.append(
+                Finding(
+                    f"{rel_dir}/kernel.py",
+                    1,
+                    "SC03",
+                    f"no test under tests/ references kernels.{name}: add a "
+                    "parity test against its ref.py oracle.",
+                )
+            )
+    return findings
+
+
+def check_module(mod: Module, graph: CallGraph) -> list[Finding]:
+    out: list[Finding] = []
+    out += _check_sc01(mod, graph)
+    out += _check_sc02(mod, graph)
+    out += _check_sc04(mod)
+    out += _check_sc05(mod)
+    return out

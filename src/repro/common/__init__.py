@@ -10,6 +10,13 @@ from .sharding import (  # noqa: F401
     query_rules,
     use_mesh,
 )
+from .guards import (  # noqa: F401
+    CompileGuard,
+    global_compile_count,
+    jit_cache_size,
+    no_host_sync,
+    strict_numerics,
+)
 from .params import (  # noqa: F401
     ParamDecl,
     count_params,

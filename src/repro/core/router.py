@@ -89,7 +89,8 @@ class OmniRouter(Policy):
             norm_grad=True, shards=cfg.shards)
         self.route_seconds = 0.0    # scheduling-overhead accounting (Fig. 3)
         self.predict_seconds = 0.0
-        self.dual_iters = 0         # total streaming dual iterations run
+        self._dual_iters = 0        # synced portion of the iteration count
+        self._iters_pending: list = []  # device scalars awaiting one batch sync
         self.windows = 0            # streaming windows routed
         # jitted predict→solve programs, keyed by (kind, solver plan,
         # masked?): the solver dispatches blocked-vs-legacy and
@@ -99,6 +100,19 @@ class OmniRouter(Policy):
 
     def prepare(self, train_ds: QAServe):
         return self
+
+    @property
+    def dual_iters(self) -> int:
+        """Total streaming dual iterations run.
+
+        Per-window ``iters_run`` scalars stay on device and sync here, in
+        one batched fetch, only when somebody actually reads the counter —
+        never inside the routing hot loop.
+        """
+        if self._iters_pending:
+            self._dual_iters += int(np.asarray(jnp.stack(self._iters_pending)).sum())
+            self._iters_pending.clear()
+        return self._dual_iters
 
     def observe(self, texts, correct, out_len):
         """Fold completed requests into the predictor's store (if it keeps
@@ -252,7 +266,9 @@ class OmniRouter(Policy):
                 jnp.asarray(batch.available), state, share=share,
                 polish_margin=self.cfg.alpha_margin, n_valid=n_valid)
         x = np.asarray(x)
-        self.dual_iters += int(info.iters_run)
+        # keep iters_run on device: int() here would add a second host sync
+        # to every routing window (SC01); dual_iters sums lazily on read
+        self._iters_pending.append(info.iters_run)
         self.windows += 1
         self.route_seconds += time.perf_counter() - t1
         return x, state

@@ -139,6 +139,9 @@ class _SimExecutor:
 
     def dispatch(self, items, x) -> List[int]:
         rejected = []
+        # one batch fetch; per-element int() on a device array would sync
+        # the host once per request (SC01)
+        x = np.asarray(x)
         for qi, j in zip(items, x):
             j = int(j)
             if self._counts[j] >= self._loads[j]:

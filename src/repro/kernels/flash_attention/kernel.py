@@ -13,6 +13,7 @@ comfortably inside the ~16 MB v5e VMEM budget for D ≤ 256.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -82,7 +83,12 @@ def flash_attention_kernel(q, k, v, *, causal: bool = True, window: int = 0,
     g = h // kh
     bq = min(bq, sq)
     bk = min(bk, skv)
-    assert sq % bq == 0 and skv % bk == 0, (sq, bq, skv, bk)
+    if sq % bq:
+        # fall back to the largest divisor instead of crashing on ragged
+        # lengths (SC05); online softmax is exact for any block size
+        bq = math.gcd(sq, bq)
+    if skv % bk:
+        bk = math.gcd(skv, bk)
     nq, nk = sq // bq, skv // bk
 
     # layout: heads major for clean per-(b, h) blocks

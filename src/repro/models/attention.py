@@ -7,6 +7,7 @@ CPU dry-run and the kernels' oracle.
 """
 from __future__ import annotations
 
+import math
 from typing import Optional
 
 import jax
@@ -75,7 +76,10 @@ def flash_attention_jnp(
     scale = d ** -0.5
 
     kv_chunk = min(kv_chunk, skv)
-    assert skv % kv_chunk == 0, (skv, kv_chunk)
+    if skv % kv_chunk:
+        # fall back to the largest divisor instead of crashing on ragged
+        # lengths (SC05); online softmax is exact for any chunk size
+        kv_chunk = math.gcd(skv, kv_chunk)
     n = skv // kv_chunk
 
     # bf16 operands + fp32 accumulation (preferred_element_type): no full-array

@@ -8,6 +8,7 @@ TPU/MXU adaptation of mLSTM (xLSTM) and SSD (Mamba-2 style) recurrences.
 """
 from __future__ import annotations
 
+import math
 from typing import Optional, Tuple
 
 import jax
@@ -27,7 +28,10 @@ def chunked_gla(
     b, s, h, dk = q.shape
     dv = v.shape[-1]
     chunk = min(chunk, s)
-    assert s % chunk == 0, (s, chunk)
+    if s % chunk:
+        # fall back to the largest divisor instead of crashing on ragged
+        # lengths (SC05); the chunked recurrence is exact for any chunk
+        chunk = math.gcd(s, chunk)
     n = s // chunk
 
     # keep q/k/v in model dtype; dots accumulate fp32 via preferred_element_type

@@ -43,18 +43,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common.guards import jit_cache_size as _jit_cache_size
 from repro.configs.base import ModelConfig
 from repro.core.control import (AdmissionRule, ControlLoop, FoldBuffer,
                                 StreamController)
 from repro.models import build_model
 from repro.models.zoo import (PAGED_POOL_KEYS, pad_cache, pages_per_request,
                               prefill_into_pages, reset_slot)
-
-
-def _jit_cache_size(fn) -> int:
-    """Compilation count of a jitted callable.  ``_cache_size`` is a private
-    jax API — degrade to 0 rather than break serving if it moves."""
-    return int(getattr(fn, "_cache_size", lambda: 0)())
 
 
 def null_route_features(batch):
@@ -462,6 +457,9 @@ class _EngineExecutor:
 
     def dispatch(self, items, x) -> List[Request]:
         rejected = []
+        # one batch fetch; per-element int() on a device array would sync
+        # the host once per request (SC01)
+        x = np.asarray(x)
         for req, j in zip(items, x):
             j = int(j)
             ep = self.server.endpoints[j]

@@ -1,3 +1,4 @@
+import contextlib
 import os
 
 # smoke tests and benches must see ONE device; only dryrun sets 512 (and only
@@ -17,3 +18,30 @@ def qaserve_small():
 @pytest.fixture(scope="session")
 def qaserve_splits(qaserve_small):
     return qaserve_small.split()
+
+
+# ---------------------------------------------------------------------------
+# staticcheck's runtime-guard markers (repro.common.guards): opt a test or a
+# whole module into strict mode with
+#     pytestmark = [pytest.mark.no_host_sync, pytest.mark.strict_numerics]
+# and exempt a single test from a module-wide no_host_sync with
+# @pytest.mark.allow_host_sync.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(autouse=True)
+def _guard_markers(request):
+    from repro.common import guards
+
+    with contextlib.ExitStack() as stack:
+        if request.node.get_closest_marker(
+            "no_host_sync"
+        ) and not request.node.get_closest_marker("allow_host_sync"):
+            stack.enter_context(guards.no_host_sync())
+        strict = request.node.get_closest_marker("strict_numerics")
+        if strict is not None:
+            stack.enter_context(
+                guards.strict_numerics(
+                    debug_nans=strict.kwargs.get("debug_nans", False)
+                )
+            )
+        yield

@@ -16,7 +16,11 @@ def _run(snippet: str, n_dev: int = 8) -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
     env["PYTHONPATH"] = os.path.join(_ROOT, "src")
-    env.pop("JAX_PLATFORMS", None)
+    # pin the backend: --xla_force_host_platform_device_count only means
+    # anything on CPU, and leaving JAX_PLATFORMS unset makes jax probe the
+    # TPU plugin on libtpu-bearing hosts — ~8 min of init polling per
+    # subprocess before it falls back to CPU
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run([sys.executable, "-c", textwrap.dedent(snippet)],
                          capture_output=True, text=True, env=env, timeout=900)
     assert out.returncode == 0, out.stderr[-3000:]

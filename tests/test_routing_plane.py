@@ -11,6 +11,16 @@ from repro.core import (DualSolver, RouteBatch, SolveInfo, brute_force,
                         solve_budget)
 from repro.core.optimizer import budget_polish
 
+# First strict-mode consumer of the staticcheck runtime guards (conftest
+# markers -> repro.common.guards):
+# - no_host_sync: the solver itself must never sync implicitly; the tests'
+#   own result reads (np.asarray / float / bool on device values) are
+#   EXPLICIT whole-result fetches, which the device-to-host guard permits.
+#   On CPU the guard is advisory (host == device); it bites on GPU/TPU.
+# - strict_numerics: the solve path promises explicit fp32 accumulation —
+#   any silent int/float promotion inside optimizer.py now raises here.
+pytestmark = [pytest.mark.no_host_sync, pytest.mark.strict_numerics]
+
 
 def _rand_instance(seed, n=6, m=3):
     rng = np.random.RandomState(seed)

@@ -179,13 +179,15 @@ def test_paged_endpoint_compile_count_constant_under_churn():
     # warmup: one request per prompt-length bucket (page multiples of 8)
     serve(0, 11, 3)
     serve(1, 5, 2)
-    warm = ep.compile_count()
-    # churn: varied lengths within the warmed buckets, varied max_new
-    for rid, (plen, mn) in enumerate([(9, 5), (4, 1), (13, 6), (2, 3),
-                                      (16, 2), (7, 7)], start=2):
-        (done,) = serve(rid, plen, mn)
-        assert len(done.output) == mn
-    assert ep.compile_count() == warm            # zero retraces under churn
+    assert ep.compile_count() > 0   # instrumentation alive, not vacuous
+    # churn: varied lengths within the warmed buckets, varied max_new —
+    # CompileGuard raises if anything retraces (engine contract from PR 3)
+    from repro.common import CompileGuard
+    with CompileGuard(ep, label="paged endpoint churn"):
+        for rid, (plen, mn) in enumerate([(9, 5), (4, 1), (13, 6), (2, 3),
+                                          (16, 2), (7, 7)], start=2):
+            (done,) = serve(rid, plen, mn)
+            assert len(done.output) == mn
     assert ep.batch_reprefills == 0
     # allocator drained back to full capacity
     assert len(ep.alloc.free_slots) == ep.L

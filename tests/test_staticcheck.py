@@ -1,0 +1,384 @@
+"""staticcheck (ISSUE 7): every rule fires on a known-bad fixture and stays
+quiet on the paired known-good one; the ignore escape hatch and the baseline
+ratchet round-trip; the repo's own tree is clean; the runtime guards raise."""
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.analysis.staticcheck import (load_baseline, new_findings, scan,
+                                        write_baseline)
+
+
+def _scan(tmp_path, files):
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return scan([tmp_path / "src"])
+
+
+def _rules(findings):
+    return sorted({f.rule for f in findings})
+
+
+# --- SC01 host-sync ----------------------------------------------------------
+
+SC01_BAD = """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    @jax.jit
+    def traced(x):
+        if jnp.any(x > 0):        # branch on tracer
+            return float(x)       # host sync on a param
+        return x.sum().item()     # .item() sync
+
+    def dispatch(items, x):
+        for req, j in zip(items, x):
+            j = int(j)            # one sync per element
+"""
+
+SC01_GOOD = """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    @jax.jit
+    def traced(x):
+        scale = float(x.shape[0])         # static shape read: fine
+        return jnp.where(x > 0, x * scale, 0.0)
+
+    def host_report(x):
+        return float(np.asarray(x).sum())  # host-only code may sync
+
+    def dispatch(items, x):
+        x = np.asarray(x)                  # one batch fetch
+        for req, j in zip(items, x):
+            j = int(j)
+"""
+
+
+def test_sc01_fires_on_bad_and_not_on_good(tmp_path):
+    bad = _scan(tmp_path / "bad", {"src/repro/mod.py": SC01_BAD})
+    assert [f.rule for f in bad].count("SC01") == 4
+    good = _scan(tmp_path / "good", {"src/repro/mod.py": SC01_GOOD})
+    assert "SC01" not in _rules(good)
+
+
+def test_sc01_follows_the_call_graph(tmp_path):
+    # float() on a param only counts inside jit-REACHABLE functions — here
+    # `helper` is reached through a call edge from the jitted entry point.
+    src = """
+        import jax
+
+        def helper(v):
+            return float(v)
+
+        @jax.jit
+        def entry(x):
+            return helper(x)
+
+        def host_only(v):
+            return float(v)
+    """
+    found = _scan(tmp_path, {"src/repro/mod.py": src})
+    lines = sorted(f.line for f in found if f.rule == "SC01")
+    assert len(lines) == 1  # helper's float, not host_only's
+
+
+# --- SC02 retrace-hazard -----------------------------------------------------
+
+SC02_BAD = """
+    import jax
+
+    @jax.jit
+    def f(x, cfg: RouterConfig):
+        return x
+
+    LOOKUP = {"a": 1}
+
+    @jax.jit
+    def g(x):
+        return x * LOOKUP["a"]
+"""
+
+SC02_GOOD = """
+    import jax
+    from functools import partial
+
+    @partial(jax.jit, static_argnames=("cfg", "mode"))
+    def f(x, cfg: RouterConfig, *, mode: str = "fast"):
+        return x
+
+    @jax.jit
+    def g(x, lookup_val):
+        return x * lookup_val
+"""
+
+
+def test_sc02_fires_on_bad_and_not_on_good(tmp_path):
+    bad = _scan(tmp_path / "bad", {"src/repro/mod.py": SC02_BAD})
+    assert [f.rule for f in bad].count("SC02") == 2
+    good = _scan(tmp_path / "good", {"src/repro/mod.py": SC02_GOOD})
+    assert "SC02" not in _rules(good)
+
+
+# --- SC03 kernel-contract ----------------------------------------------------
+
+def test_sc03_fires_on_incomplete_kernel_dir(tmp_path):
+    found = _scan(tmp_path, {"src/repro/kernels/badk/kernel.py": "x = 1\n",
+                             "tests/test_other.py": "pass\n"})
+    msgs = [f.message for f in found if f.rule == "SC03"]
+    assert any("ref.py" in m for m in msgs)
+    assert any("ops.py" in m for m in msgs)
+    assert any("no test" in m for m in msgs)
+
+
+def test_sc03_quiet_on_complete_kernel_dir(tmp_path):
+    found = _scan(tmp_path, {
+        "src/repro/kernels/goodk/kernel.py": "x = 1\n",
+        "src/repro/kernels/goodk/ref.py": "x = 1\n",
+        "src/repro/kernels/goodk/ops.py": "x = 1\n",
+        "tests/test_goodk.py": "from repro.kernels.goodk import ops\n",
+    })
+    assert "SC03" not in _rules(found)
+
+
+# --- SC04 unsafe-reduction ---------------------------------------------------
+
+SC04_BAD = """
+    import jax
+    import jax.numpy as jnp
+
+    def solve(cost, *, axis_name=None):
+        lblocks = 4
+        c3 = cost.reshape(lblocks, -1)
+        total = jnp.sum(c3)      # reduction order depends on the partitioner
+        frac = c3.mean()
+        return total + frac
+"""
+
+SC04_GOOD = """
+    import jax
+    import jax.numpy as jnp
+
+    def solve(cost, loads, *, axis_name=None):
+        lblocks = 4
+        c3 = cost.reshape(lblocks, -1)
+
+        def gather(part):
+            if axis_name is None:
+                return part[None]
+            return jax.lax.all_gather(part, axis_name, tiled=True)
+
+        def bmap(f, xs):
+            return jax.lax.map(f, xs)
+
+        total = gather(bmap(lambda c1: c1.sum(), c3)).sum()
+        cap = jnp.mean(loads)    # replicated (M,) input: untainted, fine
+        return total / cap
+"""
+
+
+def test_sc04_fires_on_bad_and_not_on_good(tmp_path):
+    bad = _scan(tmp_path / "bad", {"src/repro/mod.py": SC04_BAD})
+    assert [f.rule for f in bad].count("SC04") == 2
+    good = _scan(tmp_path / "good", {"src/repro/mod.py": SC04_GOOD})
+    assert "SC04" not in _rules(good)
+
+
+# --- SC05 grid-contract ------------------------------------------------------
+
+SC05_BAD = """
+    import jax
+    from jax.experimental import pallas as pl
+
+    def launch(x, kern, n):
+        assert x.shape[0] % 8 == 0     # crashes on ragged shapes
+        return pl.pallas_call(
+            kern,
+            grid=(n, 2),
+            in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],
+        )(x)
+"""
+
+SC05_GOOD = """
+    import math
+    import jax
+    from jax.experimental import pallas as pl
+    from jax.experimental.pallas import tpu as pltpu
+
+    def launch(x, kern, n, bq):
+        bq = math.gcd(x.shape[0], bq)  # clamp to a divisor, never crash
+        return pl.pallas_call(
+            kern,
+            grid=(n, 2),
+            in_specs=[pl.BlockSpec((bq, 8), lambda i, j: (i, j)),
+                      pl.BlockSpec(memory_space=pltpu.SMEM)],
+        )(x)
+
+    def launch_prefetch(x, kern, n):
+        spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(n, 2),
+            in_specs=[pl.BlockSpec((1, 8), lambda i, j, bt, ln: (i, j))],
+        )
+        return pl.pallas_call(kern, grid_spec=spec)(x)
+"""
+
+
+def test_sc05_fires_on_bad_and_not_on_good(tmp_path):
+    bad = _scan(tmp_path / "bad", {"src/repro/mod.py": SC05_BAD})
+    assert [f.rule for f in bad].count("SC05") == 2
+    good = _scan(tmp_path / "good", {"src/repro/mod.py": SC05_GOOD})
+    assert "SC05" not in _rules(good)
+
+
+# --- ignore escape hatch -----------------------------------------------------
+
+def test_ignore_comment_suppresses_same_line_and_next_line(tmp_path):
+    src = """
+        import jax
+        import jax.numpy as jnp
+
+        def solve(cost, *, axis_name=None):
+            lblocks = 4
+            c3 = cost.reshape(lblocks, -1)
+            a = jnp.sum(c3)  # staticcheck: ignore[SC04]
+            # staticcheck: ignore[SC04]
+            b = jnp.sum(c3)
+            c = jnp.sum(c3)  # staticcheck: ignore[SC01]  (wrong rule)
+            return a + b + c
+    """
+    found = _scan(tmp_path, {"src/repro/mod.py": src})
+    sc04 = [f for f in found if f.rule == "SC04"]
+    assert len(sc04) == 1  # only the wrong-rule line survives
+
+
+# --- baseline ratchet --------------------------------------------------------
+
+def test_baseline_round_trip_and_ratchet(tmp_path):
+    files = {"src/repro/mod.py": SC04_BAD}
+    found = _scan(tmp_path, files)
+    assert found
+    bl_path = tmp_path / "baseline.txt"
+    write_baseline(found, bl_path)
+    assert new_findings(found, load_baseline(bl_path)) == []
+
+    # a NEW violation in the same file busts through the grandfathered count
+    worse = (textwrap.dedent(files["src/repro/mod.py"])
+             + "\n\ndef more(q, *, axis_name=None):\n    lblocks = 2\n"
+             + "    q3 = q.reshape(lblocks, -1)\n    return q3.sum()\n")
+    (tmp_path / "src/repro/mod.py").write_text(worse)
+    refound = scan([tmp_path / "src"])
+    fresh = new_findings(refound, load_baseline(bl_path))
+    assert len(fresh) == 1 and fresh[0].rule == "SC04"
+
+
+def test_empty_baseline_grandfathers_nothing(tmp_path):
+    bl_path = tmp_path / "baseline.txt"
+    bl_path.write_text("# empty\n")
+    found = _scan(tmp_path, {"src/repro/mod.py": SC04_BAD})
+    assert new_findings(found, load_baseline(bl_path)) == found
+
+
+def test_cli_exit_codes(tmp_path, monkeypatch):
+    from repro.analysis.staticcheck.__main__ import main
+
+    for rel, src in {"src/repro/good.py": SC04_GOOD,
+                     "src/repro/bad.py": SC04_BAD}.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    monkeypatch.chdir(tmp_path)
+    assert main([str(tmp_path / "src/repro/good.py")]) == 0
+    assert main([str(tmp_path / "src/repro/bad.py")]) == 1
+    assert main([str(tmp_path / "src"), "--write-baseline"]) == 0
+    assert main([str(tmp_path / "src")]) == 0  # grandfathered now
+
+
+# --- the repo's own tree is clean against the committed (empty) baseline -----
+
+def test_repo_tree_is_clean():
+    from pathlib import Path
+
+    repo = Path(__file__).resolve().parents[1]
+    findings = scan([repo / "src" / "repro"])
+    baseline = load_baseline(repo / "staticcheck-baseline.txt")
+    fresh = new_findings(findings, baseline)
+    assert fresh == [], "\n".join(f.render() for f in fresh)
+    assert baseline == {}, "baseline must stay empty: fix, don't grandfather"
+
+
+# --- runtime guards (repro.common.guards) ------------------------------------
+
+class TestGuards:
+    def test_compile_guard_passes_steady_state(self):
+        import jax
+        import jax.numpy as jnp
+        from repro.common import CompileGuard
+
+        f = jax.jit(lambda a: a * 2)
+        f(jnp.ones(3))
+        with CompileGuard(f) as g:
+            f(jnp.ones(3))
+        assert g.retraces() == 0
+
+    def test_compile_guard_raises_on_retrace(self):
+        import jax
+        import jax.numpy as jnp
+        from repro.common import CompileGuard
+
+        f = jax.jit(lambda a: a + 1)
+        f(jnp.ones(3))
+        with pytest.raises(AssertionError, match="churning the jit cache"):
+            with CompileGuard(f, label="shape churn"):
+                f(jnp.ones(4))
+
+    def test_compile_guard_global_counter(self):
+        import jax
+        import jax.numpy as jnp
+        from repro.common import CompileGuard
+
+        f = jax.jit(lambda a: a - 1)
+        f(jnp.ones(2))
+        with CompileGuard() as g:   # no watch targets: process-wide
+            f(jnp.ones(2))
+        assert g.retraces() == 0
+        with CompileGuard(max_retraces=None) as g:
+            f(jnp.ones(5))
+        assert g.retraces() >= 1
+
+    def test_compile_guard_endpoint_duck_type(self):
+        from repro.common import CompileGuard
+
+        class FakeEndpoint:
+            calls = 0
+
+            def compile_count(self):
+                return self.calls
+
+        ep = FakeEndpoint()
+        with CompileGuard(ep, max_retraces=1) as g:
+            ep.calls += 1
+        assert g.retraces() == 1
+
+    def test_strict_numerics_rejects_mixed_strong_dtypes(self):
+        import jax.numpy as jnp
+        from repro.common import strict_numerics
+
+        with strict_numerics():
+            jnp.ones(3, jnp.float32) + 1.0  # weak python scalar: fine
+            with pytest.raises(Exception, match="[Pp]romotion"):
+                jnp.ones(3, jnp.float32) + jnp.ones(3, jnp.int32)
+
+    def test_no_host_sync_allows_explicit_fetch(self):
+        import jax
+        import jax.numpy as jnp
+        from repro.common import no_host_sync
+
+        with no_host_sync():
+            out = jax.device_get(jnp.arange(3.0))
+        assert np.allclose(out, [0.0, 1.0, 2.0])
