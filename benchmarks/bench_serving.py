@@ -79,7 +79,10 @@ def _race():
     n = 12 if SMOKE else 48
     work = _workload(n, seed=2)
 
+    from repro.analysis import sanitize
+
     results = {}
+    paged_eps = None
     for name, cls, kw in (("paged", Endpoint, dict(page_size=16, t_max=64,
                                                    sync_every=8)),
                           ("restart", RestartEndpoint, dict(t_max=64))):
@@ -97,6 +100,13 @@ def _race():
         # reads a private jax API): a warmed endpoint must show compiles,
         # else the zero-retrace guard below would pass vacuously
         assert all(c > 0 for c in compiles_before), compiles_before
+        # sanitizers-off timed run must do NO sanitizer work: nothing
+        # attached, nothing enabled, and the event counters frozen —
+        # structural proof that "off" costs one None check on the hot path
+        assert not sanitize.any_active()
+        assert all(getattr(getattr(e, "alloc", None), "san", None) is None
+                   for e in eps_w)
+        san_counters0 = dict(sanitize.counters)
         from repro.common import CompileGuard
         from repro.serving.engine import null_route_features
         t0 = time.perf_counter()
@@ -108,6 +118,10 @@ def _race():
             done = srv.run(null_route_features)
         wall = time.perf_counter() - t0
         assert len(done) == len(work)
+        assert sanitize.counters == san_counters0, \
+            "sanitizer counters moved during a sanitizers-off run"
+        if name == "paged":
+            paged_eps = eps_w
         compiles_after = [e.compile_count() for e in eps_w]
         tokens = sum(e.decoded_tokens for e in eps_w) - tok0
         results[name] = {
@@ -133,6 +147,36 @@ def _race():
     assert results["paged"]["retraces_during_run"] == 0, results["paged"]
     assert results["paged"]["batch_reprefills"] == 0
     assert speedup >= 2.0, f"paged only {speedup:.2f}x vs restart"
+
+    # PageSan-on delta: the same workload on the (already warm) paged pool
+    # with the shadow allocator attached — records what the full audit
+    # costs when you opt in, and proves a real run stays clean under it
+    from repro.core.baselines import BalanceAware
+    from repro.serving.engine import (MultiLLMServer, Request,
+                                      null_route_features)
+    with sanitize.enabled("pagesan"):
+        for e in paged_eps:
+            sanitize.PageSan.attach(e)
+        srv = MultiLLMServer(paged_eps, BalanceAware(), batch_size=4)
+        for i, (toks, max_new) in enumerate(work):
+            srv.submit(Request(rid=5000 + i, tokens=toks, max_new=max_new))
+        events0 = sanitize.counters["events"]
+        t0 = time.perf_counter()
+        done = srv.run(null_route_features)
+        wall_san = time.perf_counter() - t0
+        assert len(done) == len(work)
+        for e in paged_eps:
+            e.alloc.san.assert_drained(e)
+            e.alloc.san = None
+    results["sanitize"] = {
+        "members": ["pagesan"],
+        "wall_s": wall_san,
+        "overhead_vs_off": wall_san / max(results["paged"]["wall_s"], 1e-9),
+        "events": sanitize.counters["events"] - events0,
+    }
+    emit("serving_pagesan", 0.0,
+         f"overhead={results['sanitize']['overhead_vs_off']:.2f}x;"
+         f"events={results['sanitize']['events']}")
 
     import jax
     payload = {"backend": jax.default_backend(), "smoke": SMOKE,

@@ -134,18 +134,29 @@ def run():
             # greedy strawman: one query per window, cold multipliers
             g_slices = [np.array([i]) for i in range(n)]
 
+            from repro.analysis import sanitize
+
             runs = {}
+            x_warm = None
             for name, sl, warm in (("warm", slices, True),
                                    ("cold", slices, False),
                                    ("greedy", g_slices, False)):
                 _run_stream(solver, cost, qual, B, loads, sl, warm=warm)
                 # second pass is the steady state: the warmup run populated
                 # every jit cache (pow-2 padded shapes), so the timed run
-                # must compile NOTHING — CompileGuard raises otherwise
+                # must compile NOTHING — CompileGuard raises otherwise.
+                # Sanitizers are off, so the timed run must also do zero
+                # sanitizer work (frozen counters prove it structurally).
+                assert not sanitize.any_active()
+                san0 = dict(sanitize.counters)
                 from repro.common import CompileGuard
                 with CompileGuard(label=f"streaming {name} steady state"):
                     x, iters, wall = _run_stream(solver, cost, qual, B,
                                                  loads, sl, warm=warm)
+                assert sanitize.counters == san0, \
+                    "sanitizer counters moved during a sanitizers-off run"
+                if name == "warm":
+                    x_warm = x
                 runs[name] = {
                     "sr": float(qual[np.arange(n), x].mean()),
                     "cost": float(cost[np.arange(n), x].sum()),
@@ -158,6 +169,20 @@ def run():
                      f"SR={runs[name]['sr']:.4f};iters={iters};"
                      f"windows={len(sl)}")
 
+            # sanitizer-plane delta (ISSUE 8): the same warm stream under
+            # LedgerSan + SolveCert — every window must carry a passing
+            # independent feasibility certificate, the routed assignment
+            # must be bit-identical, and the audit's wall cost is recorded
+            with sanitize.enabled("ledgersan", "solvecert"):
+                certs0 = sanitize.counters["certs"]
+                x_san, _, wall_san = _run_stream(solver, cost, qual, B,
+                                                 loads, slices, warm=True)
+                assert sanitize.counters["certs"] - certs0 == len(slices)
+                assert all(cert.ok for cert in
+                           list(sanitize.last_certificates)[-len(slices):])
+            assert (x_san == x_warm).all(), \
+                "sanitizers changed the routed assignment"
+
             w, c, g = runs["warm"], runs["cold"], runs["greedy"]
             row = {
                 "n": n, "arrival": kind, "budget": B,
@@ -166,6 +191,9 @@ def run():
                    for f in ("sr", "cost", "iters", "wall_s", "windows")},
                 "warm_sr_vs_offline": w["sr"] / max(sr_off, 1e-9),
                 "warm_vs_cold_iter_ratio": w["iters"] / max(c["iters"], 1),
+                "sanitized_wall_s": wall_san,
+                "sanitize_overhead_vs_off": wall_san / max(w["wall_s"], 1e-9),
+                "sanitize_certs": len(slices),
             }
             results.append(row)
             # --- ISSUE-5 acceptance criteria ---

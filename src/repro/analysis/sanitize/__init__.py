@@ -1,0 +1,139 @@
+"""Opt-in runtime sanitizer plane (ISSUE 8) — the dynamic half of the
+guards work that staticcheck/CompileGuard started in PR 7.
+
+Three members, all **zero-overhead when off** (the hot paths pay one
+``is None`` / set-truthiness check and nothing else — the serving and
+streaming benchmarks assert this structurally):
+
+* **PageSan** (:mod:`.pagesan`) — a shadow allocator mirroring
+  ``PageAllocator``/``Endpoint``: double-free, use-after-free (block-table
+  rows referencing freed pages), cross-slot page aliasing, dump-page
+  discipline, and leaked pages/slots at drain.
+* **LedgerSan + SolveCert** (:mod:`.ledgersan`, :mod:`.solvecert`) —
+  per-window invariants on the streaming ``DualState`` ledger (budget
+  conservation, monotonicity, pad rows contribute zero) plus an independent
+  NumPy feasibility certificate for every eager ``DualSolver.route_window``
+  result (capacity, budget/α threshold, complementary slackness).
+* **Race checker** (:mod:`.racecheck`, imported lazily — it pulls in the
+  engine) — a seeded explorer permuting same-timestamp event orderings in
+  ``_EngineExecutor``/``_SimExecutor`` and asserting end-state invariants.
+
+Enable via the ``REPRO_SANITIZE`` env var (comma-separated member names,
+read once at import), the :func:`enabled` context manager, or the
+``@pytest.mark.sanitize(...)`` marker (tests/conftest.py).  The solver and
+engine consult :data:`ENABLED` through module-level ``active()`` checks, so
+flipping a member on mid-process takes effect immediately.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+
+from .pagesan import PageSan, PageSanError
+from .ledgersan import LedgerSan, LedgerSanError, check_state_monotone, \
+    check_window_transition
+from .solvecert import Certificate, SolveCertError, certify_window, \
+    last_certificates
+
+ALL_MEMBERS = ("pagesan", "ledgersan", "solvecert")
+
+#: currently-active member names.  Module-global on purpose: the engine and
+#: solver hot paths gate on ``if _sanitize.ENABLED`` (set truthiness) so the
+#: off state costs one pointer check.
+ENABLED: set = set()
+
+#: work counters, for the benchmarks' structural zero-overhead asserts and
+#: for tests asserting "every route_window carried a certificate".
+#:   events — PageSan shadow-allocator hook invocations
+#:   checks — ledger/monotonicity window checks
+#:   certs  — feasibility certificates issued by SolveCert
+counters = {"events": 0, "checks": 0, "certs": 0}
+
+
+def _parse_env() -> set:
+    raw = os.environ.get("REPRO_SANITIZE", "")
+    names = {s.strip().lower() for s in raw.split(",") if s.strip()}
+    if "all" in names or "1" in names:
+        return set(ALL_MEMBERS)
+    unknown = names - set(ALL_MEMBERS)
+    if unknown:
+        raise ValueError(f"REPRO_SANITIZE: unknown sanitizer(s) {sorted(unknown)}; "
+                         f"valid: {', '.join(ALL_MEMBERS)} (or 'all')")
+    return names
+
+
+ENABLED |= _parse_env()
+
+
+def active(name: str) -> bool:
+    """Whether one sanitizer member is currently on."""
+    return name in ENABLED
+
+
+def any_active() -> bool:
+    return bool(ENABLED)
+
+
+@contextlib.contextmanager
+def enabled(*names: str):
+    """Turn members on for a ``with`` block (no names = all of them).
+    Nested/overlapping uses compose: each exit restores the previous set."""
+    want = set(names) if names else set(ALL_MEMBERS)
+    unknown = want - set(ALL_MEMBERS)
+    if unknown:
+        raise ValueError(f"unknown sanitizer(s) {sorted(unknown)}; "
+                         f"valid: {', '.join(ALL_MEMBERS)}")
+    prev = set(ENABLED)
+    ENABLED.clear()
+    ENABLED.update(prev | want)
+    try:
+        yield
+    finally:
+        ENABLED.clear()
+        ENABLED.update(prev)
+
+
+@contextlib.contextmanager
+def disabled():
+    """Force every member off for a ``with`` block — used by the tests of
+    the off-state contract, which must hold even when CI runs the whole
+    suite with ``REPRO_SANITIZE`` set."""
+    prev = set(ENABLED)
+    ENABLED.clear()
+    try:
+        yield
+    finally:
+        ENABLED.clear()
+        ENABLED.update(prev)
+
+
+def reset_counters():
+    for k in counters:
+        counters[k] = 0
+
+
+def check_route_window(*, mode, x, cost, quality, threshold, t_eff, loads,
+                       state_in, state_out, csum, qsum, n_valid, info):
+    """The solver-side hook: called by ``DualSolver.route_window`` on the
+    eager (non-traced) path when ledgersan/solvecert are active.  Converts
+    once to NumPy here so the solver itself stays free of host syncs."""
+    import numpy as np
+    x = np.asarray(x)
+    cost = np.asarray(cost)
+    quality = np.asarray(quality)
+    loads = np.asarray(loads)
+    csum = float(csum)
+    qsum = float(qsum)
+    t_eff = float(t_eff)
+    if active("ledgersan"):
+        counters["checks"] += 1
+        check_window_transition(
+            mode=mode, threshold=float(threshold), state_in=state_in,
+            state_out=state_out, csum=csum, qsum=qsum, n_valid=n_valid,
+            iters_run=info.iters_run)
+    if active("solvecert"):
+        cert = certify_window(
+            x, cost, quality, t_eff, loads, mode, n_valid=n_valid,
+            lam=info.lam, feasible=info.feasible, csum=csum, qsum=qsum)
+        counters["certs"] += 1
+        last_certificates.append(cert)

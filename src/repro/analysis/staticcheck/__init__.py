@@ -19,6 +19,15 @@ SC04 unsafe-reduction: global reductions over the query-sharded axis
      outside the blessed gather/blocked-map combine helpers.
 SC05 grid-contract: BlockSpec index-map arity must match grid rank;
      bare tile-divisibility asserts must be padded/masked or justified.
+SC06 allocator-discipline: mutation of ``free_pages``/``free_slots``/
+     ``block_table``/``_slot_pages`` outside ``PageAllocator``/``Endpoint``
+     methods (the static twin of the PageSan runtime sanitizer).
+SC07 ledger-discipline: constructing ``DualState`` or ``_replace``-ing its
+     ledger fields outside ``DualSolver``/``StreamController`` (LedgerSan's
+     static twin — the budget ledger is conserved, not assignable).
+SC08 drain-contract: tests that ``admit``/``cancel`` on an engine without
+     proving the pool drains (free-list asserts, PageSan marker, or
+     ``assert_drained``).
 ==== ===================================================================
 
 Suppress a finding with a trailing ``# staticcheck: ignore[SC0x]`` comment

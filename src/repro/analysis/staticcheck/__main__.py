@@ -20,7 +20,8 @@ def main(argv: list[str] | None = None) -> int:
         prog="python -m repro.analysis.staticcheck",
         description="JAX/Pallas-aware lint for the repo's recurring bug "
         "classes (SC01 host-sync, SC02 retrace-hazard, SC03 kernel-contract, "
-        "SC04 unsafe-reduction, SC05 grid-contract).",
+        "SC04 unsafe-reduction, SC05 grid-contract, SC06 allocator-"
+        "discipline, SC07 ledger-discipline, SC08 drain-contract).",
     )
     ap.add_argument("paths", nargs="*", default=["src/repro"],
                     help="files or directories to scan (default: src/repro)")

@@ -107,6 +107,7 @@ def scan(paths: list[Path], repo_root: Path | None = None) -> list[Finding]:
     for mod in modules:
         findings.extend(rules.check_module(mod, graph))
     findings.extend(rules.check_kernel_contract(modules, repo_root))
+    findings.extend(rules.check_drain_contract(modules, repo_root))
 
     by_rel = {m.rel: m for m in modules}
     kept = [

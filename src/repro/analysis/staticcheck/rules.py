@@ -650,10 +650,181 @@ def check_kernel_contract(modules: list[Module], repo_root: Path) -> list[Findin
     return findings
 
 
+# ---------------------------------------------------------------------------
+# SC06 allocator-discipline / SC07 ledger-discipline
+# ---------------------------------------------------------------------------
+# The runtime sanitizers (repro.analysis.sanitize) prove these invariants
+# dynamically; SC06/SC07 refuse the code shapes that would break them:
+# state that only stays consistent because exactly one owner mutates it.
+
+ALLOC_ATTRS = {"free_pages", "free_slots", "block_table", "_slot_pages",
+               "_free_page_set"}
+ALLOC_OWNERS = {"PageAllocator", "Endpoint"}
+MUTATOR_METHODS = {"append", "pop", "extend", "insert", "remove", "clear",
+                   "add", "discard", "update", "difference_update",
+                   "symmetric_difference_update", "intersection_update",
+                   "fill", "sort", "reverse"}
+
+LEDGER_FIELDS = {"lam", "lam_load", "budget_spent", "sr_deficit", "steps"}
+LEDGER_OWNERS = {"DualSolver", "StreamController"}
+
+
+class _ClassStackVisitor(ast.NodeVisitor):
+    """Shared base: tracks the enclosing-class stack while walking."""
+
+    def __init__(self, owners: set[str]):
+        self._stack: list[str] = []
+        self._owners = owners
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self._stack.append(node.name)
+        self.generic_visit(node)
+        self._stack.pop()
+
+    def _inside_owner(self) -> bool:
+        return any(c in self._owners for c in self._stack)
+
+
+def _unwrap_subscripts(node: ast.expr) -> ast.expr:
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    return node
+
+
+def _check_sc06(mod: Module) -> list[Finding]:
+    findings: list[Finding] = []
+
+    def _msg(attr: str) -> str:
+        return (f"mutation of allocator state `{attr}` outside "
+                "PageAllocator/Endpoint methods: the free lists, the O(1) "
+                "membership mirror, and PageSan's shadow only stay "
+                "consistent when every mutation goes through the allocator "
+                "API (alloc_pages/release_pages/alloc_slot/release_slot).")
+
+    class V(_ClassStackVisitor):
+        def _flag_target(self, target: ast.expr, lineno: int) -> None:
+            t = _unwrap_subscripts(target)
+            if isinstance(t, ast.Attribute) and t.attr in ALLOC_ATTRS:
+                findings.append(Finding(mod.rel, lineno, "SC06",
+                                        _msg(t.attr)))
+
+        def visit_Assign(self, node: ast.Assign) -> None:
+            if not self._inside_owner():
+                for t in node.targets:
+                    self._flag_target(t, node.lineno)
+            self.generic_visit(node)
+
+        def visit_AugAssign(self, node: ast.AugAssign) -> None:
+            if not self._inside_owner():
+                self._flag_target(node.target, node.lineno)
+            self.generic_visit(node)
+
+        def visit_Delete(self, node: ast.Delete) -> None:
+            if not self._inside_owner():
+                for t in node.targets:
+                    self._flag_target(t, node.lineno)
+            self.generic_visit(node)
+
+        def visit_Call(self, node: ast.Call) -> None:
+            f = node.func
+            if (not self._inside_owner() and isinstance(f, ast.Attribute)
+                    and f.attr in MUTATOR_METHODS):
+                v = _unwrap_subscripts(f.value)
+                if isinstance(v, ast.Attribute) and v.attr in ALLOC_ATTRS:
+                    findings.append(Finding(mod.rel, node.lineno, "SC06",
+                                            _msg(v.attr)))
+            self.generic_visit(node)
+
+    V(ALLOC_OWNERS).visit(mod.tree)
+    return findings
+
+
+def _check_sc07(mod: Module) -> list[Finding]:
+    # the module that DEFINES DualState owns its constructors (the NamedTuple
+    # declaration, init_dual_state, and the solver's own ledger update)
+    if any(isinstance(n, ast.ClassDef) and n.name == "DualState"
+           for n in ast.walk(mod.tree)):
+        return []
+    findings: list[Finding] = []
+    msg = ("write to DualState ledger fields outside DualSolver/"
+           "StreamController: budget_spent/sr_deficit/steps are a conserved "
+           "running ledger — constructing or `_replace`-ing them elsewhere "
+           "breaks conservation (LedgerSan catches the same at runtime).")
+
+    class V(_ClassStackVisitor):
+        def visit_Call(self, node: ast.Call) -> None:
+            f = node.func
+            if not self._inside_owner():
+                if isinstance(f, ast.Name) and f.id == "DualState":
+                    findings.append(Finding(mod.rel, node.lineno, "SC07", msg))
+                elif (isinstance(f, ast.Attribute) and f.attr == "_replace"
+                        and {kw.arg for kw in node.keywords} & LEDGER_FIELDS):
+                    findings.append(Finding(mod.rel, node.lineno, "SC07", msg))
+            self.generic_visit(node)
+
+    V(LEDGER_OWNERS).visit(mod.tree)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# SC08 drain-contract (tree-level, scans tests/)
+# ---------------------------------------------------------------------------
+
+DRAIN_OK_RE = re.compile(
+    r"pagesan|assert_drained|sanitize\s*\(|staticcheck:\s*ignore\[[^\]]*SC08")
+
+
+def check_drain_contract(modules: list[Module], repo_root: Path) -> list[Finding]:
+    """Tests that admit/cancel on an engine must prove the pool drains:
+    either assert the free lists return to full (``free_slots`` AND
+    ``free_pages`` both referenced), run under PageSan (marker /
+    ``assert_drained``), or carry an explicit SC08 ignore."""
+    findings: list[Finding] = []
+    tests_dir = repo_root / "tests"
+    if not tests_dir.is_dir():
+        return findings
+    for path in sorted(tests_dir.rglob("test_*.py")):
+        source = path.read_text()
+        try:
+            tree = ast.parse(source)
+        except SyntaxError:
+            continue
+        lines = source.splitlines()
+        module_ok = bool(DRAIN_OK_RE.search("\n".join(
+            ln for ln in lines if "pytestmark" in ln)))
+        rel = (path.relative_to(repo_root).as_posix()
+               if path.is_relative_to(repo_root) else path.as_posix())
+        for f in ast.walk(tree):
+            if not isinstance(f, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    or not f.name.startswith("test_"):
+                continue
+            call = next(
+                (c for c in ast.walk(f)
+                 if isinstance(c, ast.Call) and isinstance(c.func, ast.Attribute)
+                 and c.func.attr in ("admit", "cancel")), None)
+            if call is None:
+                continue
+            start = min([d.lineno for d in f.decorator_list] + [f.lineno])
+            seg = "\n".join(lines[start - 1:f.end_lineno])
+            if module_ok or DRAIN_OK_RE.search(seg) \
+                    or ("free_slots" in seg and "free_pages" in seg):
+                continue
+            findings.append(Finding(
+                rel, call.lineno, "SC08",
+                f"{f.name} admits/cancels on an engine but never proves the "
+                "pool drains: assert free_slots/free_pages return to full, "
+                "run under @pytest.mark.sanitize(\"pagesan\") / "
+                "assert_drained(), or justify with "
+                "`# staticcheck: ignore[SC08]`."))
+    return findings
+
+
 def check_module(mod: Module, graph: CallGraph) -> list[Finding]:
     out: list[Finding] = []
     out += _check_sc01(mod, graph)
     out += _check_sc02(mod, graph)
     out += _check_sc04(mod)
     out += _check_sc05(mod)
+    out += _check_sc06(mod)
+    out += _check_sc07(mod)
     return out

@@ -44,6 +44,8 @@ from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
+from repro.analysis import sanitize as _sanitize
+
 from .baselines import Policy, pad_batch, pad_bucket
 from .optimizer import DualState
 
@@ -118,6 +120,7 @@ class StreamController:
                 with_truth=getattr(self.policy, "needs_truth", False))
             n_true = batch.n
             n_rem = max(self.horizon - self.routed, n_true)
+            state_in = self.state
             if getattr(self.policy, "pads_windows", False):
                 mult = getattr(self.policy, "window_multiple",
                                lambda: 1)()
@@ -129,6 +132,13 @@ class StreamController:
             else:
                 x, self.state = self.policy.route_window(
                     batch, self.state, share=n_true / n_rem, rng=self.rng)
+            if (_sanitize.active("ledgersan") and state_in is not None
+                    and self.state is not None):
+                # host-level ledger monotonicity across the window — covers
+                # the fused predict->solve path the solver-level hook must
+                # skip (everything is a tracer inside the jit)
+                _sanitize.check_state_monotone(state_in, self.state,
+                                               where="StreamController")
             n_routed = n_true
         else:
             from .scheduler import route_via_batch

@@ -47,6 +47,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.analysis import sanitize as _sanitize
+
 
 class SolveInfo(NamedTuple):
     """Uniform solver diagnostics — identical schema in both modes."""
@@ -753,6 +755,17 @@ class DualSolver:
             budget_spent=state.budget_spent + csum,
             sr_deficit=state.sr_deficit + deficit,
             steps=state.steps + info.iters_run)
+        if _sanitize.ENABLED and not isinstance(x, jax.core.Tracer):
+            # opt-in sanitizer plane (repro.analysis.sanitize): ledger
+            # conservation + an independent NumPy feasibility certificate.
+            # Eager path only — under the router's fused predict->solve jit
+            # everything here is a tracer and the host-level LedgerSan check
+            # in StreamController/OmniRouter covers the window instead.
+            _sanitize.check_route_window(
+                mode=self.mode, x=x, cost=cost, quality=quality,
+                threshold=threshold, t_eff=t_eff, loads=loads,
+                state_in=state, state_out=new_state, csum=csum, qsum=qsum,
+                n_valid=nv, info=info)
         return x, info, new_state
 
 

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import sanitize as _sanitize
 from repro.data.qaserve import QAServe
 from repro.data import tokenizer
 from .baselines import Policy, RouteBatch
@@ -237,6 +238,7 @@ class OmniRouter(Policy):
         Returns ``(assignment, new_state)``."""
         if state is None:
             state = init_dual_state(batch.m)
+        state_in = state
         threshold = (self.cfg.budget if self.cfg.budget is not None
                      else self.cfg.alpha)
         if hasattr(self.predictor, "predict_device"):
@@ -266,6 +268,12 @@ class OmniRouter(Policy):
                 jnp.asarray(batch.available), state, share=share,
                 polish_margin=self.cfg.alpha_margin, n_valid=n_valid)
         x = np.asarray(x)
+        if _sanitize.active("ledgersan"):
+            # the fused jit returns a concrete out-state; the monotone check
+            # is the ledger coverage for this path (the solver-level
+            # certificate hook only sees tracers inside the fusion)
+            _sanitize.check_state_monotone(state_in, state,
+                                           where="OmniRouter.route_window")
         # keep iters_run on device: int() here would add a second host sync
         # to every routing window (SC01); dual_iters sums lazily on read
         self._iters_pending.append(info.iters_run)

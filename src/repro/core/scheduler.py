@@ -192,13 +192,19 @@ class _SimExecutor:
         self.live.setdefault(qi, []).append((self.next_eid, j, self.t + dur))
         self.next_eid += 1
 
+    def _hedge_scan(self):
+        # ordering seam: same-finish-time events have no inherent scan
+        # order; the schedule race checker (analysis/sanitize/racecheck)
+        # permutes this per seed to prove the outcome doesn't depend on it
+        return list(self.done_q)
+
     def _maybe_hedge(self):
         """Duplicate un-hedged in-flight stragglers (remaining time vs the
         median service seen so far) on the least-loaded endpoint."""
         if not self.cfg.hedge or not self.service_seen:
             return
         med = float(np.median(self.service_seen))
-        for ft, eid, qi, j in list(self.done_q):
+        for ft, eid, qi, j in self._hedge_scan():
             if (eid in self.cancelled or self.completed[qi]
                     or self.hedged_q[qi]
                     or (ft - self.t) <= self.cfg.hedge_factor * med):

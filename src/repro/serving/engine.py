@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import sanitize as _sanitize
 from repro.common.guards import jit_cache_size as _jit_cache_size
 from repro.configs.base import ModelConfig
 from repro.core.control import (AdmissionRule, ControlLoop, FoldBuffer,
@@ -97,24 +98,49 @@ class PageAllocator:
         self.n_slots = n_slots
         self.free_pages: List[int] = list(range(n_pages - 1, 0, -1))
         self.free_slots: List[int] = list(range(n_slots - 1, -1, -1))
+        # O(1) membership mirror of free_pages: the release-time double-free
+        # assert was an O(n) list scan per page — quadratic at real pool sizes
+        self._free_page_set = set(self.free_pages)
+        # PageSan shadow allocator (repro.analysis.sanitize); None = off, and
+        # the only cost on this path is the None check below
+        self.san = None
 
     def alloc_pages(self, n: int) -> List[int]:
         if n > len(self.free_pages):
             raise RuntimeError(f"page pool exhausted: want {n}, "
                                f"free {len(self.free_pages)}")
-        return [self.free_pages.pop() for _ in range(n)]
+        # take the tail in one slice + delete (same order as repeated pop())
+        # so a failure above leaves the free list untouched — no partial
+        # pops are ever observable
+        pages = self.free_pages[:-n - 1:-1]
+        del self.free_pages[len(self.free_pages) - n:]
+        self._free_page_set.difference_update(pages)
+        if self.san is not None:
+            self.san.on_alloc_pages(pages)
+        return pages
 
     def release_pages(self, pages: List[int]):
         for p in pages:
-            assert 0 < p < self.n_pages and p not in self.free_pages
+            assert 0 < p < self.n_pages and p not in self._free_page_set
             self.free_pages.append(p)
+            self._free_page_set.add(p)
+        if self.san is not None:
+            self.san.on_release_pages(pages)
 
     def alloc_slot(self) -> int:
-        return self.free_slots.pop()
+        if not self.free_slots:
+            raise RuntimeError(f"slot pool exhausted: all {self.n_slots} "
+                               f"slots in use")
+        slot = self.free_slots.pop()
+        if self.san is not None:
+            self.san.on_alloc_slot(slot)
+        return slot
 
     def release_slot(self, slot: int):
         assert slot not in self.free_slots
         self.free_slots.append(slot)
+        if self.san is not None:
+            self.san.on_release_slot(slot)
 
 
 class Endpoint:
@@ -166,7 +192,15 @@ class Endpoint:
         self.prefill_calls = 0       # one per admitted request
         self.batch_reprefills = 0    # ALWAYS 0 here — the restart metric
 
+        if _sanitize.active("pagesan"):
+            _sanitize.PageSan.attach(self)
+
     # -- instrumentation -----------------------------------------------------
+    def _san_check(self):
+        """Full PageSan audit between chunks; one None check when off."""
+        san = self.alloc.san
+        if san is not None:
+            san.check_endpoint(self)
     def compile_count(self) -> int:
         """Total jit compilations across this endpoint's device functions.
         Constant once every prompt-length bucket has been seen — admissions
@@ -200,6 +234,7 @@ class Endpoint:
                     self.alloc.release_pages(self._slot_pages[slot])
                     self._slot_pages[slot] = []
                 self.alloc.release_slot(slot)
+                self._san_check()
                 return True
         return False
 
@@ -257,6 +292,7 @@ class Endpoint:
         self.remaining[slot] = req.max_new
         self.last_tokens[slot, 0] = toks[-1]
         self.slot_req[slot] = req
+        self._san_check()
 
     # -- fused decode chunk --------------------------------------------------
     def _chunk_fn(self, params, state, block_table, last, lens, remaining):
@@ -322,6 +358,7 @@ class Endpoint:
         self.last_tokens = last
         self.lens = lens
         self.remaining = remaining
+        self._san_check()
         return finished
 
     def step(self) -> List[Request]:
@@ -491,7 +528,9 @@ class _EngineExecutor:
             return [], True
         # dispatch every endpoint's chunk before blocking on any result:
         # jax async dispatch overlaps the whole pool's decode work
-        pending = [(e, e.step_begin()) for e in self.server.endpoints]
+        eps = self.server.endpoints
+        pending = [(eps[i], eps[i].step_begin())
+                   for i in self._pool_order(len(eps))]
         done: List[Request] = []
         progressed = False
         for e, p in pending:
@@ -499,9 +538,18 @@ class _EngineExecutor:
             progressed = progressed or bool(fin) or bool(e.active_count())
             done.extend(fin)
         self.steps += 1
-        done = self._resolve_hedges(done)
+        done = self._resolve_hedges(self._completion_order(done))
         self.server.completed.extend(done)
         return done, progressed
+
+    # -- ordering seams (identity here; the schedule race checker in
+    # ``repro.analysis.sanitize.racecheck`` permutes them per seed to prove
+    # same-chunk completions/hedges/cancels commute) --------------------------
+    def _pool_order(self, k: int):
+        return range(k)
+
+    def _completion_order(self, done: List[Request]) -> List[Request]:
+        return done
 
     def tick(self):
         """Post-event hook (same slot as the simulator's): fire the hedge
@@ -521,6 +569,12 @@ class _EngineExecutor:
                 best, best_free = j, free
         return best
 
+    def _hedge_candidates(self):
+        # ordering seam (see _pool_order): in-flight requests have no
+        # inherent hedge-scan order within a chunk boundary
+        return [(i, req) for i, ep in enumerate(self.server.endpoints)
+                for req in ep.active_requests()]
+
     def _maybe_hedge(self):
         """Duplicate un-hedged slow decodes: a request still in flight
         ``hedge_after`` chunks past admission gets a sibling copy admitted
@@ -529,22 +583,21 @@ class _EngineExecutor:
         srv = self.server
         if srv.hedge_after <= 0:
             return
-        for i, ep in enumerate(srv.endpoints):
-            for req in ep.active_requests():
-                if (req.hedged or req.done
-                        or self.steps - req.admit_step < srv.hedge_after):
-                    continue
-                alt = self._pick_alt(i, req)
-                if alt is None:
-                    continue
-                shadow = dataclasses.replace(
-                    req, output=None, done=False, endpoint=alt, hedged=True,
-                    admit_step=float(self.steps))
-                req.hedged = True
-                srv._shadow_ids.add(id(shadow))
-                srv._hedges[req.rid] = (req, i, shadow, alt)
-                srv.endpoints[alt].admit(shadow)
-                srv.hedged += 1
+        for i, req in self._hedge_candidates():
+            if (req.hedged or req.done
+                    or self.steps - req.admit_step < srv.hedge_after):
+                continue
+            alt = self._pick_alt(i, req)
+            if alt is None:
+                continue
+            shadow = dataclasses.replace(
+                req, output=None, done=False, endpoint=alt, hedged=True,
+                admit_step=float(self.steps))
+            req.hedged = True
+            srv._shadow_ids.add(id(shadow))
+            srv._hedges[req.rid] = (req, i, shadow, alt)
+            srv.endpoints[alt].admit(shadow)
+            srv.hedged += 1
 
     def _resolve_hedges(self, done: List[Request]) -> List[Request]:
         """First finisher wins: report the PRIMARY request (with the
@@ -589,6 +642,10 @@ class MultiLLMServer:
     ``policy.route_window`` so multipliers and the budget/α ledger carry
     across windows), and online fold-back of completed requests into the
     router's vector store."""
+
+    # executor factory, overridable per-instance: the schedule race checker
+    # swaps in a seeded event-order-permuting subclass
+    _executor_cls = _EngineExecutor
 
     def __init__(self, endpoints: List[Endpoint], policy, *,
                  batch_size: int = 0, hedge_after_steps: int = 0,
@@ -673,7 +730,7 @@ class MultiLLMServer:
         items = [req for _, req in self.queue]
         times = np.array([t for t, _ in self.queue])
         self.queue.clear()
-        executor = _EngineExecutor(self, max_steps)
+        executor = self._executor_cls(self, max_steps)
         loop = ControlLoop(
             executor=executor, controller=controller, rule=self.rule,
             items=items, features=route_features, fold=fold,

@@ -26,6 +26,11 @@ def qaserve_splits(qaserve_small):
 #     pytestmark = [pytest.mark.no_host_sync, pytest.mark.strict_numerics]
 # and exempt a single test from a module-wide no_host_sync with
 # @pytest.mark.allow_host_sync.
+#
+# The sanitizer plane (repro.analysis.sanitize) rides the same fixture:
+# @pytest.mark.sanitize("pagesan", "solvecert") turns members on for one
+# test (no args = all members); CI also flips them suite-wide via the
+# REPRO_SANITIZE env var.
 # ---------------------------------------------------------------------------
 
 @pytest.fixture(autouse=True)
@@ -44,4 +49,8 @@ def _guard_markers(request):
                     debug_nans=strict.kwargs.get("debug_nans", False)
                 )
             )
+        san = request.node.get_closest_marker("sanitize")
+        if san is not None:
+            from repro.analysis import sanitize
+            stack.enter_context(sanitize.enabled(*san.args))
         yield

@@ -1,0 +1,493 @@
+"""Sanitizer plane (ISSUE 8): every member has a known-bad fixture it flags
+and a known-good path it stays quiet on — PageSan (shadow allocator),
+LedgerSan (DualState conservation), SolveCert (independent feasibility
+certificates), and the schedule race checker (seeded event-order
+permutation over both executors).  Plus: the zero-overhead-when-off
+contract and the pytest-marker wiring."""
+import dataclasses
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st  # hypothesis, or deterministic fallback
+
+from repro.analysis import sanitize
+from repro.analysis.sanitize import (LedgerSan, LedgerSanError, PageSan,
+                                     PageSanError, SolveCertError,
+                                     certify_window)
+
+
+# ---------------------------------------------------------------------------
+# PageSan
+# ---------------------------------------------------------------------------
+
+_EP_CACHE = {}
+
+
+def _endpoint():
+    """One smoke endpoint shared by the PageSan tests (drained between
+    uses — that is exactly the invariant under test)."""
+    ep = _EP_CACHE.get("ep")
+    if ep is None:
+        from repro.configs import get_smoke_config
+        from repro.serving.engine import Endpoint
+        ep = Endpoint(get_smoke_config("h2o-danube-3-4b"), max_concurrency=3,
+                      t_max=32, page_size=8, sync_every=2, seed=0)
+        _EP_CACHE["ep"] = ep
+    if ep.alloc.san is None:
+        PageSan.attach(ep)
+    return ep
+
+
+@pytest.mark.sanitize("pagesan")
+@settings(max_examples=8, deadline=None)
+@given(ops=st.lists(st.integers(0, 9), min_size=1, max_size=20),
+       seed=st.integers(0, 999))
+def test_pagesan_endpoint_fuzz_admit_cancel_complete(ops, seed):
+    """Randomized admit / cancel (the hedging straggler-kill path) /
+    decode-chunk churn over a live endpoint, PageSan auditing after every
+    mutation; every trace must drain back to a pristine pool."""
+    from repro.serving.engine import Request
+    ep = _endpoint()
+    rng = np.random.RandomState(seed)
+    rid = 0
+    for op in ops:
+        if op < 5 and ep.has_capacity():
+            plen = int(rng.randint(1, 9))
+            ep.admit(Request(rid=rid, tokens=rng.randint(
+                1, 200, (plen,)).astype(np.int32),
+                max_new=int(rng.randint(1, 5))))
+            rid += 1
+        elif op < 7:
+            act = ep.active_requests()
+            if act:
+                ep.cancel(act[int(rng.randint(len(act)))])
+        else:
+            ep.step()
+    while ep.active_count():
+        ep.step()
+    ep.alloc.san.assert_drained(ep)
+    assert len(ep.alloc.free_slots) == ep.L
+    assert len(ep.alloc.free_pages) == ep.alloc.n_pages - 1
+
+
+def test_pagesan_double_free_fires():
+    from repro.serving.engine import PageAllocator
+    a = PageAllocator(n_pages=8, n_slots=2)
+    san = PageSan(a)
+    a.san = san
+    pages = a.alloc_pages(2)
+    a.release_pages(pages)
+    # the allocator's own assert is the first line of defense...
+    with pytest.raises(AssertionError):
+        a.release_pages(pages)
+    # ...and the shadow proves it independently (still fires under -O)
+    with pytest.raises(PageSanError, match="double-free"):
+        san.on_release_pages([pages[0]])
+    with pytest.raises(PageSanError, match="double-free"):
+        san.on_release_slot(a.free_slots[-1])
+
+
+def test_pagesan_leak_fires():
+    from repro.serving.engine import PageAllocator
+    a = PageAllocator(n_pages=6, n_slots=2)
+    san = PageSan(a)
+    a.san = san
+    a.alloc_pages(2)                      # never released
+    with pytest.raises(PageSanError, match="leaked"):
+        san.assert_drained()
+
+
+@pytest.mark.sanitize("pagesan")
+def test_pagesan_uaf_alias_and_dump_page_fire():
+    """Seeded corruptions of a LIVE endpoint's block table: a row pointing
+    at a freed page (use-after-free), two rows sharing a page (aliasing),
+    and a decode write position resolving to page 0 (dump-page violation).
+    Each is repaired afterwards and the endpoint drains clean."""
+    from repro.serving.engine import Request
+    ep = _endpoint()
+    rng = np.random.RandomState(0)
+    ep.admit(Request(rid=100, tokens=rng.randint(1, 200, (9,)).astype(np.int32),
+                     max_new=3))
+    ep.admit(Request(rid=101, tokens=rng.randint(1, 200, (9,)).astype(np.int32),
+                     max_new=3))
+    s0 = next(s for s, r in enumerate(ep.slot_req) if r is not None)
+    s1 = next(s for s, r in enumerate(ep.slot_req) if r is not None and s != s0)
+    san = ep.alloc.san
+
+    # use-after-free: wire a FREE page into a live row
+    keep = int(ep.block_table[s0, 0])
+    ep.block_table[s0, 0] = ep.alloc.free_pages[-1]
+    with pytest.raises(PageSanError, match="use-after-free|disagrees"):
+        san.check_endpoint(ep)
+    ep.block_table[s0, 0] = keep
+
+    # cross-slot aliasing: the same physical page in two live page lists
+    keep_pages = list(ep._slot_pages[s1])
+    keep_row = ep.block_table[s1].copy()
+    ep._slot_pages[s1] = [ep._slot_pages[s0][0]] + keep_pages[1:]
+    ep.block_table[s1, 0] = ep._slot_pages[s0][0]
+    with pytest.raises(PageSanError, match="alias"):
+        san.check_endpoint(ep)
+    ep._slot_pages[s1] = keep_pages
+    ep.block_table[s1] = keep_row
+
+    # dump-page violation: the slot's next write position points at page 0
+    wpos = int(ep.lens[s0]) // ep.page_size
+    keep = int(ep.block_table[s0, wpos])
+    keep_pages = list(ep._slot_pages[s0])
+    ep.block_table[s0, wpos] = 0
+    ep._slot_pages[s0] = keep_pages[:wpos] if wpos else []
+    with pytest.raises(PageSanError, match="dump-page|disagrees|leaked"):
+        san.check_endpoint(ep)
+    ep.block_table[s0, wpos] = keep
+    ep._slot_pages[s0] = keep_pages
+
+    # freed-slot rows must stay zeroed (their writes land on the dump page)
+    act = ep.active_requests()
+    ep.cancel(act[0])
+    dead = next(s for s in (s0, s1) if ep.slot_req[s] is None)
+    ep.block_table[dead, 0] = 3
+    with pytest.raises(PageSanError, match="retains a nonzero"):
+        san.check_endpoint(ep)
+    ep.block_table[dead, 0] = 0
+
+    ep.cancel(ep.active_requests()[0])
+    san.assert_drained(ep)
+
+
+def test_sanitizers_off_is_zero_overhead():
+    """The off state must do NO shadow-state work: no PageSan attach, no
+    hook dispatch, no counters movement — the hot paths pay one None/set
+    check.  (The benchmarks assert the same around their timed runs.)"""
+    from repro.serving.engine import PageAllocator
+    with sanitize.disabled():           # holds even under REPRO_SANITIZE CI
+        assert not sanitize.any_active()
+        before = dict(sanitize.counters)
+        a = PageAllocator(n_pages=16, n_slots=4)
+        assert a.san is None
+        s = a.alloc_slot()
+        p = a.alloc_pages(3)
+        a.release_pages(p)
+        a.release_slot(s)
+        assert sanitize.counters == before
+
+
+def test_sanitize_marker_and_env_wiring():
+    with sanitize.disabled():
+        assert not sanitize.active("pagesan")
+        with sanitize.enabled("pagesan"):
+            assert sanitize.active("pagesan")
+            assert not sanitize.active("ledgersan")
+            with sanitize.enabled():    # no args = every member
+                assert all(sanitize.active(m) for m in sanitize.ALL_MEMBERS)
+            assert sanitize.active("pagesan")
+            assert not sanitize.active("solvecert")
+        assert not sanitize.any_active()
+    with pytest.raises(ValueError, match="unknown sanitizer"):
+        with sanitize.enabled("pagesan", "typo"):
+            pass
+
+
+@pytest.mark.sanitize("pagesan", "solvecert")
+def test_sanitize_marker_enables_members():
+    assert sanitize.active("pagesan") and sanitize.active("solvecert")
+    if not os.environ.get("REPRO_SANITIZE"):
+        assert not sanitize.active("ledgersan")
+
+
+# ---------------------------------------------------------------------------
+# LedgerSan + SolveCert
+# ---------------------------------------------------------------------------
+
+def _window_instance(seed=0, n=24, m=4):
+    rng = np.random.RandomState(seed)
+    cost = rng.rand(n, m).astype(np.float32)
+    qual = rng.rand(n, m).astype(np.float32)
+    loads = np.full(m, 2.0 * n, np.float32)
+    return cost, qual, loads
+
+
+def test_ledgersan_and_solvecert_certify_eager_stream():
+    """Known-good: every eager route_window in a budget stream carries a
+    passing certificate and a conserving ledger transition."""
+    from repro.core.optimizer import DualSolver, init_dual_state
+    cost, qual, loads = _window_instance()
+    B = 0.45 * len(cost)
+    with sanitize.enabled("ledgersan", "solvecert"):
+        certs0 = sanitize.counters["certs"]
+        solver = DualSolver(mode="budget", iters=60)
+        st_ = init_dual_state(len(loads))
+        for k in range(3):
+            sl = slice(k * 8, (k + 1) * 8)
+            x, info, st_ = solver.route_window(cost[sl], qual[sl], B, loads,
+                                               st_, share=8 / (24 - k * 8))
+        windows = 3
+        assert sanitize.counters["certs"] - certs0 == windows
+        for cert in list(sanitize.last_certificates)[-windows:]:
+            assert cert.ok and cert.mode == "budget"
+        assert float(st_.budget_spent) <= B + 1e-4
+
+
+def test_ledgersan_conservation_and_overwrite_fire():
+    from repro.core.optimizer import init_dual_state
+    st0 = init_dual_state(3)
+    good = st0._replace(budget_spent=jnp.asarray(2.0),
+                        steps=jnp.asarray(10.0))
+    # known-good transition passes
+    sanitize.check_window_transition(
+        mode="budget", threshold=5.0, state_in=st0, state_out=good,
+        csum=2.0, qsum=0.0, n_valid=4, iters_run=10.0)
+    # ledger overwrite: reported spend disagrees with the window cost sum
+    with pytest.raises(LedgerSanError, match="conservation"):
+        sanitize.check_window_transition(
+            mode="budget", threshold=5.0, state_in=st0, state_out=good,
+            csum=0.5, qsum=0.0, n_valid=4, iters_run=10.0)
+    # spend above the global budget
+    with pytest.raises(LedgerSanError, match="exceeds the global budget"):
+        sanitize.check_window_transition(
+            mode="budget", threshold=1.5, state_in=st0, state_out=good,
+            csum=2.0, qsum=0.0, n_valid=4, iters_run=10.0)
+    # monotonicity: a ledger that moves backwards
+    with pytest.raises(LedgerSanError, match="decreased"):
+        sanitize.check_state_monotone(good, st0)
+
+
+def test_ledgersan_cumulative_audit_fires_on_replaced_ledger():
+    from repro.core.optimizer import init_dual_state
+    audit = LedgerSan(mode="budget", threshold=10.0)
+    st0 = init_dual_state(2)
+    st1 = st0._replace(budget_spent=jnp.asarray(1.0), steps=jnp.asarray(5.0))
+    audit.observe(st0, st1, csum=1.0, iters_run=5)
+    # someone swapped the ledger wholesale between windows: conservation
+    # holds per-transition but the independent running total disagrees
+    st1_tampered = st1._replace(budget_spent=jnp.asarray(4.0))
+    st2 = st1_tampered._replace(budget_spent=jnp.asarray(5.0),
+                                steps=jnp.asarray(9.0))
+    with pytest.raises(LedgerSanError, match="independent sum"):
+        audit.observe(st1_tampered, st2, csum=1.0, iters_run=4)
+
+
+def test_solvecert_flags_capacity_budget_and_slack_violations():
+    cost, qual, loads = _window_instance(n=8)
+    # capacity: everything crammed onto endpoint 0 with room elsewhere
+    tight = np.array([1.0, 8.0, 8.0, 8.0], np.float32)
+    with pytest.raises(SolveCertError, match="capacity"):
+        certify_window(np.zeros(8, int), cost, qual, 100.0, tight, "budget")
+    # budget: claimed feasible but the realized cost exceeds t_eff
+    x = np.argmax(cost, axis=1)          # deliberately expensive choices
+    spend = float(cost[np.arange(8), x].sum())
+    with pytest.raises(SolveCertError, match="exceeds the effective budget"):
+        certify_window(x, cost, qual, spend / 2, loads, "budget",
+                       feasible=True)
+    # infeasible-claiming solves are recorded, not raised
+    cert = certify_window(x, cost, qual, spend / 2, loads, "budget",
+                          feasible=False, strict=True)
+    assert cert.ok
+    # pad leakage: the solver-reported masked sum disagrees with the
+    # valid-prefix recompute
+    with pytest.raises(SolveCertError, match="pad rows leaked"):
+        certify_window(x, cost, qual, spend * 2, loads, "budget",
+                       csum=spend + 1.0)
+    # complementary slackness: a huge multiplier against huge slack means
+    # the dual never converged to the reported operating point
+    cheap = np.argmin(cost, axis=1)
+    with pytest.raises(SolveCertError, match="complementary-slackness"):
+        certify_window(cheap, cost, qual, 1000.0, loads, "budget",
+                       lam=50.0, feasible=True)
+    # quality mode: claimed feasible below the α threshold
+    with pytest.raises(SolveCertError, match="below the α threshold"):
+        certify_window(np.argmin(qual, axis=1), cost, qual, 0.99, loads,
+                       "quality", feasible=True)
+
+
+def test_solvecert_quality_mode_eager_window_passes():
+    from repro.core.optimizer import DualSolver, init_dual_state
+    cost, qual, loads = _window_instance(seed=2)
+    with sanitize.enabled("ledgersan", "solvecert"):
+        solver = DualSolver(mode="quality", iters=60)
+        st_ = init_dual_state(len(loads))
+        x, info, st_ = solver.route_window(cost, qual, 0.5, loads, st_)
+        cert = sanitize.last_certificates[-1]
+        assert cert.ok and cert.mode == "quality"
+
+
+def test_route_window_sanitizers_off_do_no_work():
+    from repro.core.optimizer import DualSolver, init_dual_state
+    cost, qual, loads = _window_instance(seed=3)
+    with sanitize.disabled():
+        before = dict(sanitize.counters)
+        solver = DualSolver(mode="budget", iters=40)
+        solver.route_window(cost, qual, 8.0, loads,
+                            init_dual_state(len(loads)))
+        assert sanitize.counters == before
+
+
+# ---------------------------------------------------------------------------
+# schedule race checker
+# ---------------------------------------------------------------------------
+
+def test_racecheck_wake_at_in_past_fires():
+    """The documented livelock hazard: ControlLoop._wake_at must only hand
+    the executor strictly-future deadlines — a passed one turns the idle
+    jump into a no-op and the loop spins forever."""
+    from repro.analysis.sanitize import racecheck
+    from repro.core.baselines import BalanceAware
+    from repro.serving.engine import MultiLLMServer
+
+    srv = MultiLLMServer([_OrderLeakEndpoint(0, [0])], BalanceAware(),
+                         batch_size=2)
+    cls = racecheck._engine_executor_cls(np.random.RandomState(0))
+    ex = cls(srv, 10)
+    with pytest.raises(racecheck.RaceCheckError, match="strictly future"):
+        ex.advance(0.0)
+    with pytest.raises(racecheck.RaceCheckError, match="strictly future"):
+        ex.advance(-1.0)
+
+
+class _OrderLeakEndpoint:
+    """Deliberately order-dependent fake endpoint: each serviced chunk
+    emits a POOL-GLOBAL sequence number, so any change in the executor's
+    endpoint servicing order changes the outputs — the exact bug class the
+    race checker exists to flag."""
+    L = 2
+
+    def __init__(self, idx, clock):
+        self.idx = idx
+        self.clock = clock          # shared mutable counter
+        self.reqs = []
+
+    def active_count(self):
+        return len(self.reqs)
+
+    def has_capacity(self):
+        return len(self.reqs) < self.L
+
+    def active_requests(self):
+        return list(self.reqs)
+
+    def can_serve(self, req):
+        return True
+
+    def admit(self, req):
+        req.output = []
+        self.reqs.append(req)
+
+    def cancel(self, req):
+        if req in self.reqs:
+            self.reqs.remove(req)
+            return True
+        return False
+
+    def step_begin(self):
+        return list(self.reqs) or None
+
+    def step_end(self, pending):
+        done = []
+        for r in pending or []:
+            self.clock[0] += 1
+            r.output.append(self.clock[0])   # leaks global service order
+            if len(r.output) >= r.max_new:
+                r.done = True
+                self.reqs.remove(r)
+                done.append(r)
+        return done
+
+
+def test_racecheck_flags_order_dependent_pool():
+    from repro.analysis.sanitize import racecheck
+    from repro.core.baselines import BalanceAware
+    from repro.serving.engine import MultiLLMServer, Request, \
+        null_route_features
+
+    # precondition: the two seeds genuinely service the pool in different
+    # orders on the first chunk (deterministic given numpy's MT19937)
+    assert (np.random.RandomState(0).permutation(3).tolist()
+            != np.random.RandomState(1).permutation(3).tolist())
+
+    def make_server():
+        clock = [0]
+        eps = [_OrderLeakEndpoint(i, clock) for i in range(3)]
+        srv = MultiLLMServer(eps, BalanceAware(), batch_size=3)
+        for rid in range(6):
+            srv.submit(Request(rid=rid, tokens=np.array([1, 2]), max_new=2))
+        return srv, null_route_features
+
+    with pytest.raises(racecheck.RaceCheckError,
+                       match="depend on same-timestamp event ordering"):
+        racecheck.explore_engine_schedules(make_server, seeds=(0, 1))
+
+
+def test_racecheck_engine_pool_is_interleaving_independent():
+    """Known-good, real engine: a hedged 2-endpoint pool produces identical
+    outputs under permuted chunk/completion/hedge orderings, every request
+    completes exactly once, and both allocators drain (PageSan-audited)."""
+    from repro.analysis.sanitize import racecheck
+    from repro.configs import get_smoke_config
+    from repro.core.baselines import BalanceAware
+    from repro.serving.engine import Endpoint, MultiLLMServer, Request, \
+        null_route_features
+
+    with sanitize.enabled("pagesan"):
+        eps = [Endpoint(dataclasses.replace(get_smoke_config(a),
+                                            dtype=jnp.float32),
+                        max_concurrency=2, t_max=32, page_size=8,
+                        sync_every=2, seed=i)
+               for i, a in enumerate(["h2o-danube-3-4b", "hymba-1.5b"])]
+        rng = np.random.RandomState(3)
+        prompts = [rng.randint(1, 500, (9,)).astype(np.int32)
+                   for _ in range(4)]
+
+        def make_server():
+            srv = MultiLLMServer(eps, BalanceAware(), batch_size=2,
+                                 hedge_after_steps=2)
+            for i, p in enumerate(prompts):
+                srv.submit(Request(rid=i, tokens=p, max_new=6))
+            return srv, null_route_features
+
+        report = racecheck.explore_engine_schedules(make_server,
+                                                    seeds=(0, 1, 2))
+    assert report.runs == 3
+    assert len(report.fingerprint) == len(prompts)
+
+
+def test_racecheck_sim_tie_storm_is_interleaving_independent():
+    """Equal service times everywhere: completions pop in a fully permuted
+    order per seed, yet assignment and realized cost must not move.  Loads
+    are ample so every query routes up front — under scarce capacity the
+    *schedule* (which tied completion frees a slot first) legitimately
+    feeds back into load-aware routing, which is variance, not a race."""
+    from repro.analysis.sanitize import racecheck
+    from repro.core import BalanceAware, SchedulerConfig
+    from repro.data.qaserve import generate
+
+    def make_args():
+        ds = generate(n=16, seed=0)
+        ds.out_len[:, :] = 40                  # maximal finish-time ties
+        return ds, BalanceAware(), SchedulerConfig(loads=8, seed=3)
+
+    report = racecheck.explore_sim_schedules(make_args, seeds=(0, 1, 2))
+    assert report.runs == 3
+
+
+def test_racecheck_sim_hedged_straggler_is_interleaving_independent():
+    from repro.analysis.sanitize import racecheck
+    from repro.core import BalanceAware, SchedulerConfig
+    from repro.data.qaserve import generate
+
+    def make_args():
+        ds = generate(n=16, seed=0)
+        # distinct finish times + exactly one straggler: the hedge fires,
+        # the straggler copy is cancelled, and no ordering ambiguity hides
+        # a real divergence
+        ds.out_len[:, :] = (40 + 3 * np.arange(16)[:, None]
+                            + np.arange(ds.m)[None, :])
+        ds.out_len[3, :] = 1200
+        return ds, BalanceAware(), SchedulerConfig(loads=4, seed=3,
+                                                   hedge=True,
+                                                   hedge_factor=2.0)
+
+    report = racecheck.explore_sim_schedules(make_args, seeds=(0, 1, 2))
+    assert report.runs == 3

@@ -94,10 +94,15 @@ def test_page_allocator_invariants():
     assert set(again) == set(got)                       # freed pages reused
     s = [a.alloc_slot() for _ in range(3)]
     assert sorted(s) == [0, 1, 2]
-    with pytest.raises(IndexError):
-        a.alloc_slot()
+    with pytest.raises(RuntimeError, match="slot pool exhausted"):
+        a.alloc_slot()                  # descriptive, not a bare IndexError
     a.release_slot(s[0])
     assert a.alloc_slot() == s[0]
+    # exception safety: a failing alloc_pages leaves NO partial pops behind
+    free_before = list(a.free_pages)
+    with pytest.raises(RuntimeError, match="page pool exhausted"):
+        a.alloc_pages(len(free_before) + 1)
+    assert a.free_pages == free_before
 
 
 # ---------------------------------------------------------------------------

@@ -236,6 +236,142 @@ def test_sc05_fires_on_bad_and_not_on_good(tmp_path):
     assert "SC05" not in _rules(good)
 
 
+# --- SC06 allocator-discipline -----------------------------------------------
+
+SC06_BAD = """
+    def steal_a_page(server):
+        ep = server.endpoints[0]
+        ep.alloc.free_pages.pop()            # bypasses the allocator API
+        ep.alloc._free_page_set.clear()      # desyncs the O(1) mirror
+        ep.block_table[0, 0] = 7             # rewires a live row
+        ep._slot_pages[0].append(7)
+        del ep.alloc.free_slots[0]
+"""
+
+SC06_GOOD = """
+    class PageAllocator:
+        def release_pages(self, pages):
+            self.free_pages.extend(pages)    # the owner may mutate
+            self._free_page_set.update(pages)
+
+    class Endpoint:
+        def admit(self, req):
+            self.block_table[0, 0] = 3
+            self._slot_pages[0].append(3)
+
+    def read_only(server):
+        ep = server.endpoints[0]
+        n_free = len(ep.alloc.free_pages)    # reads are fine
+        row = ep.block_table[0].copy()
+        return n_free, row
+"""
+
+
+def test_sc06_fires_on_bad_and_not_on_good(tmp_path):
+    bad = _scan(tmp_path / "bad", {"src/repro/mod.py": SC06_BAD})
+    assert [f.rule for f in bad].count("SC06") == 5
+    good = _scan(tmp_path / "good", {"src/repro/mod.py": SC06_GOOD})
+    assert "SC06" not in _rules(good)
+
+
+# --- SC07 ledger-discipline --------------------------------------------------
+
+SC07_BAD = """
+    def reset_budget(state):
+        return state._replace(budget_spent=0.0)   # ledger overwrite
+
+    def forge(lam):
+        return DualState(lam, lam, 0.0, 0.0, 0.0)
+"""
+
+SC07_GOOD = """
+    class DualSolver:
+        def step(self, state, csum):
+            return state._replace(budget_spent=state.budget_spent + csum)
+
+    def warm_multiplier(state):
+        return state._replace(lam_init=0.5)       # not a ledger field
+
+    def read_ledger(state):
+        return float(state.budget_spent)          # reads are fine
+"""
+
+
+def test_sc07_fires_on_bad_and_not_on_good(tmp_path):
+    bad = _scan(tmp_path / "bad", {"src/repro/mod.py": SC07_BAD})
+    assert [f.rule for f in bad].count("SC07") == 2
+    good = _scan(tmp_path / "good", {"src/repro/mod.py": SC07_GOOD})
+    assert "SC07" not in _rules(good)
+
+
+def test_sc07_exempts_the_defining_module(tmp_path):
+    src = """
+        from typing import NamedTuple
+
+        class DualState(NamedTuple):
+            lam: float
+            budget_spent: float
+
+        def init_dual_state():
+            return DualState(0.0, 0.0)    # constructor lives here: fine
+    """
+    found = _scan(tmp_path, {"src/repro/mod.py": src})
+    assert "SC07" not in _rules(found)
+
+
+# --- SC08 drain-contract -----------------------------------------------------
+
+SC08_BAD_TEST = """
+    def test_admit_without_drain_proof(ep):
+        ep.admit(make_request())
+        assert ep.active_count() == 1
+"""
+
+SC08_GOOD_TESTS = """
+    import pytest
+
+    def test_admit_with_free_list_asserts(ep):
+        ep.admit(make_request())
+        drain(ep)
+        assert len(ep.alloc.free_slots) == ep.L
+        assert len(ep.alloc.free_pages) == ep.alloc.n_pages - 1
+
+    @pytest.mark.sanitize("pagesan")
+    def test_admit_under_pagesan(ep):
+        ep.admit(make_request())
+
+    def test_admit_with_explicit_waiver(ep):
+        ep.admit(make_request())  # staticcheck: ignore[SC08]
+
+    def test_no_engine_traffic_at_all():
+        assert 1 + 1 == 2
+"""
+
+
+def test_sc08_fires_on_undrained_test_and_not_on_proven_ones(tmp_path):
+    bad = _scan(tmp_path / "bad", {"src/repro/mod.py": "x = 1\n",
+                                   "tests/test_bad.py": SC08_BAD_TEST})
+    sc08 = [f for f in bad if f.rule == "SC08"]
+    assert len(sc08) == 1 and "test_bad.py" in sc08[0].path
+    good = _scan(tmp_path / "good", {"src/repro/mod.py": "x = 1\n",
+                                     "tests/test_good.py": SC08_GOOD_TESTS})
+    assert "SC08" not in _rules(good)
+
+
+def test_sc08_module_level_pagesan_mark_covers_the_file(tmp_path):
+    src = """
+        import pytest
+
+        pytestmark = pytest.mark.sanitize("pagesan")
+
+        def test_admit(ep):
+            ep.admit(make_request())
+    """
+    found = _scan(tmp_path, {"src/repro/mod.py": "x = 1\n",
+                             "tests/test_marked.py": src})
+    assert "SC08" not in _rules(found)
+
+
 # --- ignore escape hatch -----------------------------------------------------
 
 def test_ignore_comment_suppresses_same_line_and_next_line(tmp_path):
