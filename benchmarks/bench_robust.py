@@ -1,0 +1,182 @@
+"""Failure-plane benchmark (ISSUE 9) — writes ``BENCH_robust.json`` at the
+repo root.
+
+A degraded-pool stream: one endpoint hard-downs mid-run and another flaps
+with a transient error rate.  The same Poisson stream is routed three ways:
+
+- ``healthy`` — no faults attached at all (the reference pool, and the
+  structural zero-overhead check: the fault plane's consult counters must
+  stay frozen through this run),
+- ``naive``   — faults injected, but no breakers and no robust solve: the
+  router keeps feeding the corpse until each request burns its retry
+  budget,
+- ``robust``  — the failure plane on: circuit breakers fence the dead
+  endpoint out of the workload constraint, latency EWMAs reprice the cost
+  column, and the dual solve runs against the quality lower-confidence
+  bound ``q - kappa*sigma``.
+
+Asserted (the ISSUE-9 acceptance criteria):
+- robust SR recovers to >= 0.95x the healthy-pool SR;
+- robust realized spend never exceeds the budget ledger's cap B;
+- robust strictly beats naive SR and trips at least one breaker;
+- the fault plane is zero-overhead when no FaultPlan is attached
+  (``faults.counters`` frozen through the healthy run), and the timed
+  steady-state pass compiles nothing (CompileGuard).
+
+``ROBUST_BENCH_SMOKE=1`` shrinks the stream for CI.
+
+  PYTHONPATH=src python -m benchmarks.run --only robust
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+
+from .common import emit
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_robust.json")
+SMOKE = os.environ.get("ROBUST_BENCH_SMOKE", "0") == "1"
+
+N = 400 if SMOKE else 1600
+RATE = 40.0 if SMOKE else 80.0
+KAPPA = 0.5
+RETRY_BUDGET = 6          # flapper coins at 0.6: p(exhaust) ~ 0.6^7, negligible
+FAULTY = (0, 1)           # endpoints the fault plan below targets
+
+
+def _pool(n: int, seed: int = 3):
+    from repro.data.qaserve import generate
+    ds = generate(n=n, seed=seed)
+    train, _, test = ds.split(0.5, 0.0, seed=0)
+    return train, test
+
+
+def _router(train, *, robust: bool, budget: float):
+    from repro.core import OmniRouter, RetrievalPredictor, RouterConfig
+    return OmniRouter(RetrievalPredictor(k=8).fit(train),
+                      RouterConfig(budget=budget, robust=robust,
+                                   kappa=KAPPA if robust else 1.0))
+
+
+def _cfg(test, **kw):
+    from repro.core import SchedulerConfig
+    base = dict(arrival="poisson", arrival_rate=RATE, window=0.25,
+                streaming_dual=True, horizon=test.n)
+    base.update(kw)
+    return SchedulerConfig(**base)
+
+
+def _fault_plan():
+    from repro.serving.faults import FaultPlan, FaultSpec
+    # endpoint 0 dies for good mid-stream; endpoint 1 flaps transiently at
+    # an error rate ABOVE the breaker's open threshold, so the health plane
+    # fences it instead of letting it silently burn retry budgets
+    return FaultPlan({FAULTY[0]: (FaultSpec("hard_down", start=1.0),),
+                      FAULTY[1]: (FaultSpec("error_rate", rate=0.6,
+                                            start=0.5, end=4.0),)}, seed=1)
+
+
+def run():
+    from repro.analysis import sanitize
+    from repro.common import CompileGuard
+    from repro.core import run_serving
+    from repro.serving import faults
+
+    train, test = _pool(N)
+    cost = test.cost_matrix()
+    # The budget must be FEASIBLE for the worst-case surviving pool: with
+    # both faulted endpoints fenced, every mid-outage arrival pays the
+    # detour premium of the remaining columns, and assignment is mandatory
+    # (per-window floors are the streaming ledger's documented conservation
+    # caveat — an infeasible B is overspent by construction, not by bug).
+    # 3.5x the surviving-pool floor sits above the detour trajectory while
+    # the robust stream still tracks the ledger (realized spend keeps
+    # rising if B is raised further).
+    c_floor = float(np.delete(cost, FAULTY, axis=1).min(1).sum())
+    B = 3.5 * c_floor
+
+    # --- healthy reference + the structural zero-overhead check ------------
+    faults.reset_counters()
+    fc0 = dict(faults.counters)
+    t0 = time.perf_counter()
+    healthy = run_serving(test, _router(train, robust=False, budget=B),
+                          _cfg(test))
+    healthy_wall = time.perf_counter() - t0
+    assert faults.counters == fc0 == {"checks": 0, "injected": 0}, \
+        "fault plane did work with no FaultPlan attached"
+
+    # --- naive under faults: no breakers, no robust solve -------------------
+    t0 = time.perf_counter()
+    naive = run_serving(test, _router(train, robust=False, budget=B),
+                        _cfg(test, fault_plan=_fault_plan(),
+                             retry_budget=RETRY_BUDGET))
+    naive_wall = time.perf_counter() - t0
+
+    # --- the failure plane on: breakers + LCB solve (warmup, then timed) ---
+    # ONE router instance for both passes: the predict->solve jit caches
+    # live on the router, so a fresh instance would recompile and trip
+    # the CompileGuard below.
+    robust_router = _router(train, robust=True, budget=B)
+
+    def robust_run():
+        return run_serving(
+            test, robust_router,
+            _cfg(test, fault_plan=_fault_plan(), health=True,
+                 retry_budget=RETRY_BUDGET))
+
+    robust_run()                                 # populate every jit cache
+    assert not sanitize.any_active()
+    san0 = dict(sanitize.counters)
+    t0 = time.perf_counter()
+    with CompileGuard(label="robust degraded-pool steady state"):
+        robust = robust_run()
+    robust_wall = time.perf_counter() - t0
+    assert sanitize.counters == san0, \
+        "sanitizer counters moved during a sanitizers-off run"
+
+    # --- ISSUE-9 acceptance criteria ----------------------------------------
+    assert robust.success_rate >= 0.95 * healthy.success_rate, \
+        (f"robust SR {robust.success_rate:.3f} did not recover to 0.95x "
+         f"healthy {healthy.success_rate:.3f}")
+    assert robust.cost <= B * 1.0001, \
+        f"robust overspent the ledger: {robust.cost:.5f} > {B:.5f}"
+    assert robust.success_rate > naive.success_rate, \
+        "breakers+LCB did not beat naive routing under faults"
+    assert robust.breaker_trips >= 1, "the dead endpoint never tripped"
+
+    rows = {}
+    for name, res, wall in (("healthy", healthy, healthy_wall),
+                            ("naive", naive, naive_wall),
+                            ("robust", robust, robust_wall)):
+        rows[name] = {
+            "sr": float(res.success_rate), "cost": float(res.cost),
+            "failures": int(res.failures), "retries": int(res.retries),
+            "breaker_trips": int(res.breaker_trips),
+            "windows": int(res.windows), "wall_s": float(wall),
+        }
+        emit(f"robust_{name}", wall * 1e6 / max(res.windows, 1),
+             f"SR={res.success_rate:.4f};fail={res.failures};"
+             f"retries={res.retries};trips={res.breaker_trips}")
+
+    payload = {
+        "n": test.n, "arrival_rate": RATE, "budget": B, "kappa": KAPPA,
+        "retry_budget": RETRY_BUDGET, "smoke": SMOKE,
+        "sr_recovery_vs_healthy": rows["robust"]["sr"]
+                                  / max(rows["healthy"]["sr"], 1e-9),
+        **{f"{k}_{f}": v[f] for k, v in rows.items() for f in v},
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    emit("robust_recovery", 0.0,
+         f"recovery={payload['sr_recovery_vs_healthy']:.3f};"
+         f"budget_ok={rows['robust']['cost'] <= B}")
+
+
+if __name__ == "__main__":
+    run()

@@ -27,6 +27,7 @@ MODULES = [
     ("retrieval", "benchmarks.bench_retrieval"),  # writes BENCH_retrieval.json
     ("streaming", "benchmarks.bench_streaming"),  # writes BENCH_streaming.json
     ("sharded", "benchmarks.bench_sharded"),      # writes BENCH_sharded.json
+    ("robust", "benchmarks.bench_robust"),        # writes BENCH_robust.json
     ("roofline", "benchmarks.bench_roofline"),
 ]
 

@@ -28,10 +28,24 @@ import numpy as np
 
 from repro.serving import engine as _engine
 from repro.core import scheduler as _scheduler
+from repro.core.health import OPEN as _OPEN
 
 
 class RaceCheckError(AssertionError):
     """A schedule-order invariant was violated."""
+
+
+def _check_no_open_admits(health, before, after):
+    """A breaker in the OPEN state must never gain an in-flight request —
+    not from routing, not from hedging, not from a fault retry."""
+    if health is None:
+        return
+    for j, state in enumerate(health.breaker_state):
+        if state == _OPEN and after[j] > before[j]:
+            raise RaceCheckError(
+                f"breaker admitted while OPEN: endpoint {j} went "
+                f"{before[j]} -> {after[j]} in-flight with its breaker "
+                f"tripped")
 
 
 # -- permuting executors ------------------------------------------------------
@@ -60,6 +74,25 @@ class _PermutingEngineExecutor(_engine._EngineExecutor):
     def _hedge_candidates(self):
         cands = super()._hedge_candidates()
         return [cands[i] for i in self.rng.permutation(len(cands))]
+
+    def _fault_candidates(self):
+        # same-chunk flake/watchdog failures have no inherent sweep order
+        cands = super()._fault_candidates()
+        return [cands[i] for i in self.rng.permutation(len(cands))]
+
+    def _active(self):
+        return [ep.active_count() for ep in self.server.endpoints]
+
+    def dispatch(self, items, x):
+        before = self._active()
+        out = super().dispatch(items, x)
+        _check_no_open_admits(self.server.health, before, self._active())
+        return out
+
+    def tick(self):
+        before = self._active()
+        super().tick()          # hedging admits here
+        _check_no_open_admits(self.server.health, before, self._active())
 
 
 def _engine_executor_cls(rng: np.random.RandomState):
@@ -103,6 +136,17 @@ class _PermutingSimExecutor(_scheduler._SimExecutor):
     def _hedge_scan(self):
         events = super()._hedge_scan()
         return [events[i] for i in self.rng.permutation(len(events))]
+
+    def dispatch(self, items, x):
+        before = np.asarray(self._counts).copy()
+        out = super().dispatch(items, x)
+        _check_no_open_admits(self.health, before, np.asarray(self._counts))
+        return out
+
+    def tick(self):
+        before = np.asarray(self._counts).copy()
+        super().tick()          # hedging admits here
+        _check_no_open_admits(self.health, before, np.asarray(self._counts))
 
 
 def _sim_executor_cls(rng: np.random.RandomState, created: list):
@@ -166,7 +210,8 @@ def explore_engine_schedules(make_server: Callable[[], tuple], *,
         done = srv.run(feats, max_steps=max_steps)
         _engine_invariants(srv, done)
         fingerprints.append(tuple(sorted(
-            (r.rid, r.done, tuple(r.output or ())) for r in done)))
+            (r.rid, r.done, getattr(r, "failed", False),
+             tuple(r.output or ())) for r in done)))
         srv.completed = []
     if any(fp != fingerprints[0] for fp in fingerprints[1:]):
         raise RaceCheckError(
@@ -209,6 +254,7 @@ def explore_sim_schedules(make_args: Callable[[], tuple], *,
                 raise RaceCheckError(f"{missing} query(ies) never completed")
         fingerprints.append((
             tuple(int(v) for ex in created for v in ex.assign),
+            tuple(bool(f) for ex in created for f in ex.failed_q),
             float(round(res.cost, 9)),
         ))
     if any(fp != fingerprints[0] for fp in fingerprints[1:]):

@@ -28,6 +28,10 @@ SC07 ledger-discipline: constructing ``DualState`` or ``_replace``-ing its
 SC08 drain-contract: tests that ``admit``/``cancel`` on an engine without
      proving the pool drains (free-list asserts, PageSan marker, or
      ``assert_drained``).
+SC09 health-state discipline: mutation of circuit-breaker / EWMA state
+     (``breaker_state``, ``fail_ewma``, ...) outside ``HealthTracker``
+     methods — executors report through ``record``/``note_admit``, the
+     routing side reads pure views.
 ==== ===================================================================
 
 Suppress a finding with a trailing ``# staticcheck: ignore[SC0x]`` comment

@@ -767,6 +767,67 @@ def _check_sc07(mod: Module) -> list[Finding]:
 
 
 # ---------------------------------------------------------------------------
+# SC09 health-state discipline
+# ---------------------------------------------------------------------------
+
+HEALTH_ATTRS = {"breaker_state", "fail_ewma", "lat_ewma", "open_until",
+                "probe_inflight", "probe_wins", "events_seen", "trips"}
+HEALTH_OWNERS = {"HealthTracker"}
+
+
+def _check_sc09(mod: Module) -> list[Finding]:
+    """Breaker/EWMA state may only be mutated inside ``HealthTracker``: the
+    executors report outcomes through ``record``/``note_admit`` and the
+    routing side reads pure views (``effective_loads``/``admissible``).  A
+    write from anywhere else desynchronizes the breaker state machine from
+    its hysteresis counters (and the racecheck breaker invariant with it)."""
+    findings: list[Finding] = []
+
+    def _msg(attr: str) -> str:
+        return (f"mutation of health state `{attr}` outside HealthTracker: "
+                "breaker transitions and the failure/latency EWMAs only stay "
+                "consistent when every update goes through the tracker API "
+                "(record/note_admit/advance).")
+
+    class V(_ClassStackVisitor):
+        def _flag_target(self, target: ast.expr, lineno: int) -> None:
+            t = _unwrap_subscripts(target)
+            if isinstance(t, ast.Attribute) and t.attr in HEALTH_ATTRS:
+                findings.append(Finding(mod.rel, lineno, "SC09",
+                                        _msg(t.attr)))
+
+        def visit_Assign(self, node: ast.Assign) -> None:
+            if not self._inside_owner():
+                for t in node.targets:
+                    self._flag_target(t, node.lineno)
+            self.generic_visit(node)
+
+        def visit_AugAssign(self, node: ast.AugAssign) -> None:
+            if not self._inside_owner():
+                self._flag_target(node.target, node.lineno)
+            self.generic_visit(node)
+
+        def visit_Delete(self, node: ast.Delete) -> None:
+            if not self._inside_owner():
+                for t in node.targets:
+                    self._flag_target(t, node.lineno)
+            self.generic_visit(node)
+
+        def visit_Call(self, node: ast.Call) -> None:
+            f = node.func
+            if (not self._inside_owner() and isinstance(f, ast.Attribute)
+                    and f.attr in MUTATOR_METHODS):
+                v = _unwrap_subscripts(f.value)
+                if isinstance(v, ast.Attribute) and v.attr in HEALTH_ATTRS:
+                    findings.append(Finding(mod.rel, node.lineno, "SC09",
+                                            _msg(v.attr)))
+            self.generic_visit(node)
+
+    V(HEALTH_OWNERS).visit(mod.tree)
+    return findings
+
+
+# ---------------------------------------------------------------------------
 # SC08 drain-contract (tree-level, scans tests/)
 # ---------------------------------------------------------------------------
 
@@ -827,4 +888,5 @@ def check_module(mod: Module, graph: CallGraph) -> list[Finding]:
     out += _check_sc05(mod)
     out += _check_sc06(mod)
     out += _check_sc07(mod)
+    out += _check_sc09(mod)
     return out

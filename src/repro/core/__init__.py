@@ -7,6 +7,7 @@ from .baselines import (BalanceAware, Oracle, PerceptionOnly, Policy,  # noqa: F
 from .control import (AdmissionRule, ControlLoop, FoldBuffer,  # noqa: F401
                       StreamController)
 from .features import featurize, featurize_tokens, projection  # noqa: F401
+from .health import HealthConfig, HealthTracker  # noqa: F401
 from .hybrid import HybridConfig, HybridPredictor  # noqa: F401
 from .optimizer import (DualSolver, DualState, SolveInfo,  # noqa: F401
                         brute_force, fold_threshold, init_dual_state,

@@ -38,6 +38,8 @@ The executor duck-type:
 from __future__ import annotations
 
 import dataclasses
+import heapq
+import itertools
 import time
 from collections import deque
 from typing import Callable, List, Optional, Sequence
@@ -82,11 +84,12 @@ class StreamController:
     """
 
     def __init__(self, policy: Policy, *, horizon: int = 0,
-                 stream: bool = True, rng=None):
+                 stream: bool = True, rng=None, health=None):
         self.policy = policy
         self.stream = stream
         self.horizon = int(horizon)
         self.rng = rng
+        self.health = health    # optional HealthTracker (failure plane)
         self.state: Optional[DualState] = None
         self.routed = 0
         self.windows = 0
@@ -114,10 +117,25 @@ class StreamController:
         and ``repair_workload`` enforces it exactly — but a custom
         stateful policy that over-commits capacity would drift."""
         t0 = time.perf_counter()
+        if self.health is not None:
+            # breakers fold into the workload constraint (OPEN -> capacity
+            # 0, HALF_OPEN -> probe slots), so the solver simply can't
+            # assign to a tripped endpoint; latency EWMAs reprice the cost
+            # column (multiplier >= 1: the ledger only over-estimates).
+            loads = self.health.effective_loads(loads)
         if self.stream:
             batch = ds_like.route_batch(
                 np.asarray(loads, float), counts,
                 with_truth=getattr(self.policy, "needs_truth", False))
+            if self.health is not None:
+                pm = self.health.price_multiplier()
+                if np.any(pm != 1.0):
+                    batch = dataclasses.replace(
+                        batch,
+                        price_in=(batch.price_in * pm).astype(
+                            batch.price_in.dtype),
+                        price_out=(batch.price_out * pm).astype(
+                            batch.price_out.dtype))
             n_true = batch.n
             n_rem = max(self.horizon - self.routed, n_true)
             state_in = self.state
@@ -213,7 +231,7 @@ class ControlLoop:
                  features: Callable, fold: FoldBuffer,
                  arrival_times: Optional[np.ndarray] = None,
                  window: float = 0.0, drain_admissions: bool = True,
-                 requeue_front: bool = False):
+                 requeue_front: bool = False, health=None):
         self.executor = executor
         self.controller = controller
         self.rule = rule
@@ -222,32 +240,61 @@ class ControlLoop:
         self.window = float(window)
         self.drain_admissions = drain_admissions
         self.requeue_front = requeue_front
+        self.health = health
+        self._seq = itertools.count()
         items = list(items)
         if arrival_times is None:
             arrival_times = np.zeros(len(items))
         order = np.argsort(arrival_times, kind="stable")
-        self.pending = deque((float(arrival_times[i]), items[i])
-                             for i in order)
+        # min-heap of (time, tiebreak, item).  The tiebreak makes the pop
+        # order of equal-time entries deterministic regardless of insertion
+        # order — retries requeued by the executors land here, and the
+        # racecheck explorer permutes the event order that produces them.
+        self.pending: list = [(float(arrival_times[i]), self._pkey(items[i]),
+                               items[i]) for i in order]
+        heapq.heapify(self.pending)
         self.ready: deque = deque()
         self._next_window = -np.inf
+        if hasattr(executor, "requeue"):
+            # failed-request re-entry: the executor hands (item, at) back to
+            # the admission queue with its backoff-deferred release time
+            executor.requeue = self.push_pending
+
+    def _pkey(self, item):
+        rid = getattr(item, "rid", None)
+        if rid is not None:
+            return (0, int(rid))
+        try:
+            return (0, int(item))
+        except (TypeError, ValueError):
+            return (1, next(self._seq))
+
+    def push_pending(self, item, at: float):
+        """Re-enter ``item`` into the arrival stream at time ``at`` (retry
+        after a fault, with backoff already folded into ``at``)."""
+        heapq.heappush(self.pending, (float(at), self._pkey(item), item))
 
     # -- stream bookkeeping ----------------------------------------------------
     def _release_arrivals(self):
         now = self.executor.now()
         while self.pending and self.pending[0][0] <= now + 1e-9:
-            self.ready.append(self.pending.popleft()[1])
+            self.ready.append(heapq.heappop(self.pending)[2])
 
     def _wake_at(self) -> Optional[float]:
         """Next clock value at which something new can happen while the
-        executor is otherwise idle: an arrival, or the window deadline.
-        Only STRICTLY FUTURE times count — a deadline already passed must
-        not short-circuit the executor's own event processing (that would
-        spin the loop without ever advancing)."""
+        executor is otherwise idle: an arrival, a window deadline, or a
+        breaker cooldown expiry.  Only STRICTLY FUTURE times count — a
+        deadline already passed must not short-circuit the executor's own
+        event processing (that would spin the loop without advancing)."""
         now = self.executor.now()
         wake = self.pending[0][0] if self.pending else None
         if (self.ready and self.window > 0 and self._next_window > now
                 and (wake is None or self._next_window < wake)):
             wake = self._next_window
+        if self.health is not None:
+            hb = self.health.next_wake(now)
+            if hb is not None and (wake is None or hb < wake):
+                wake = hb
         return wake
 
     # -- one admission attempt -------------------------------------------------
@@ -257,6 +304,8 @@ class ControlLoop:
             return False
         counts = np.asarray(ex.counts())
         loads = np.asarray(ex.loads())
+        if self.health is not None:
+            loads = self.health.effective_loads(loads)
         if not np.any(counts < loads):
             return False
         if (self.window > 0 and ex.now() < self._next_window
@@ -275,7 +324,13 @@ class ControlLoop:
                 self.ready.append(item)
         self._next_window = ex.now() + self.window
         ex.tick()
-        return True
+        # a fully-rejected batch is NOT admission progress: with
+        # drain_admissions the caller would skip ``advance`` and re-route
+        # the same batch against a frozen clock forever (a rate-limited
+        # endpoint that looks free to the workload constraint triggers
+        # exactly this).  Let the executor advance to the next event
+        # instead — the items are back in ``ready`` for the next window.
+        return len(rejected) < len(batch)
 
     # -- the loop --------------------------------------------------------------
     def run(self):
@@ -284,6 +339,8 @@ class ControlLoop:
         while self.ready or self.pending or ex.counts().sum() > 0:
             if getattr(ex, "stopped", False):
                 break               # executor hit its hard step budget
+            if self.health is not None:
+                self.health.advance(ex.now())   # OPEN -> HALF_OPEN on expiry
             admitted = self._try_admit()
             if admitted and self.drain_admissions:
                 continue

@@ -550,12 +550,19 @@ class DualSolver:
     #                                shard_map, bit-identical to shards on
     #                                one device (see the block comment above
     #                                _blocked_window_core)
+    robust: bool = False           # route_window solves against the quality
+    #                                lower-confidence-bound q - kappa*sigma
+    kappa: float = 1.0             # LCB width (0 == bit-identical to robust
+    #                                off: x - 0.0*sigma is exact for finite
+    #                                sigma and no subgraph changes shape)
 
     def __post_init__(self):
         if self.mode not in ("quality", "budget"):
             raise ValueError(f"unknown solver mode: {self.mode!r}")
         if self.shards < 1:
             raise ValueError(f"shards must be >= 1: {self.shards}")
+        if self.kappa < 0.0:
+            raise ValueError(f"kappa must be >= 0: {self.kappa}")
 
     # -- sharded/blocked dispatch ---------------------------------------------
     def _plan(self):
@@ -708,7 +715,8 @@ class DualSolver:
 
     def route_window(self, cost, quality, threshold, loads,
                      state: Optional[DualState] = None, *, share=1.0,
-                     polish_margin: float = 0.0, n_valid=None
+                     polish_margin: float = 0.0, n_valid=None,
+                     quality_std=None
                      ) -> Tuple[jax.Array, SolveInfo, DualState]:
         """One streaming window: fold the cumulative ledger into this
         window's effective threshold, warm-start the ascent from the carried
@@ -722,10 +730,25 @@ class DualSolver:
         stream charges exactly what it routed.  All ops are jnp, so the
         whole method traces into one jit (the router fuses
         predict→route_window into a single boundary).
+
+        With ``robust=True`` the solve runs against the lower-confidence
+        bound ``q - kappa*sigma`` (``quality_std`` when given, else the
+        Bernoulli std of the predicted quality).  The substitution happens
+        HERE, before mode dispatch, so every downstream path — legacy,
+        fused kernel, blocked, mesh-sharded — and the ledger itself see
+        the LCB: the quality ledger banks pessimistic qsum, so predictor
+        error can only leave headroom, never overdraw the α constraint.
         """
         cost = jnp.asarray(cost, jnp.float32)
         quality = jnp.asarray(quality, jnp.float32)
         loads = jnp.asarray(loads, jnp.float32)
+        if self.robust:
+            if quality_std is None:
+                qc = jnp.clip(quality, 0.0, 1.0)
+                sigma = jnp.sqrt(qc * (1.0 - qc))
+            else:
+                sigma = jnp.asarray(quality_std, jnp.float32)
+            quality = quality - jnp.float32(self.kappa) * sigma
         n, m = cost.shape
         if state is None:
             state = init_dual_state(m)

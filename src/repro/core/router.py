@@ -65,6 +65,12 @@ class RouterConfig:
     # same blocks spread one-per-device via shard_map, bit-identical to the
     # single-device blocked solve.  1 adopts the mesh size automatically.
     shards: int = 1
+    # failure plane (ISSUE 9): robust=True solves streaming windows against
+    # the quality lower-confidence-bound q - kappa*sigma (Bernoulli sigma by
+    # default) so predictor error can't overdraw the alpha ledger; kappa=0
+    # is bit-identical to robust off.
+    robust: bool = False
+    kappa: float = 1.0
 
 
 class OmniRouter(Policy):
@@ -87,7 +93,8 @@ class OmniRouter(Policy):
             mode=mode, iters=cfg.iters, lr_constraint=cfg.lr_stream,
             lr_workload=cfg.lr_workload, use_kernel=cfg.use_assign_kernel,
             stall_tol=cfg.stall_tol, stall_patience=cfg.stall_patience,
-            norm_grad=True, shards=cfg.shards)
+            norm_grad=True, shards=cfg.shards,
+            robust=cfg.robust, kappa=cfg.kappa)
         self.route_seconds = 0.0    # scheduling-overhead accounting (Fig. 3)
         self.predict_seconds = 0.0
         self._dual_iters = 0        # synced portion of the iteration count

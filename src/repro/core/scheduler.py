@@ -55,6 +55,16 @@ class SchedulerConfig:
     window: float = 0.0             # min seconds between routing windows
     streaming_dual: bool = False    # carry DualState across windows
     horizon: int = 0                # expected stream length (0 -> ds.n)
+    # --- failure plane (ISSUE 9) ---
+    fault_plan: Optional[object] = None  # serving.faults.FaultPlan (duck-
+    #                                      typed: down/down_during/flake/
+    #                                      latency_factor/rate_limit)
+    health: bool = False            # per-endpoint circuit breakers + EWMAs
+    health_cfg: Optional[object] = None  # core.health.HealthConfig override
+    retry_budget: int = 2           # failed-request re-dispatches allowed
+    backoff_s: float = 0.5          # retry k re-enters after backoff_s*2^k
+    fail_frac: float = 0.5          # a flaking request errors after this
+    #                                 fraction of its service time
 
 
 @dataclasses.dataclass
@@ -70,6 +80,9 @@ class ServeResult:
     hedged: int = 0
     windows: int = 0                # routing windows the stream used
     dual_iters: int = 0             # total dual iterations (streaming_dual)
+    failures: int = 0               # requests failed past their retry budget
+    retries: int = 0                # failed attempts that re-entered the queue
+    breaker_trips: int = 0          # circuit-breaker CLOSED/HALF_OPEN -> OPEN
 
 
 def route_via_batch(policy: Policy, ds_like, loads, counts, rng=None
@@ -109,7 +122,8 @@ class _SimExecutor:
     of completion events, per-model in-flight counts, and the hedging
     machinery.  Items are query indices into ``ds``."""
 
-    def __init__(self, ds: QAServe, cfg: SchedulerConfig, loads: np.ndarray):
+    def __init__(self, ds: QAServe, cfg: SchedulerConfig, loads: np.ndarray,
+                 plan=None, health=None):
         self.ds = ds
         self.cfg = cfg
         self._loads = loads
@@ -126,6 +140,45 @@ class _SimExecutor:
         self.completed = np.zeros(ds.n, bool)
         self.hedged_q = np.zeros(ds.n, bool)
         self.service_seen: List[float] = []
+        # --- failure plane (ISSUE 9); all of it dormant when plan/health
+        # are None (zero-overhead off: the hot paths pay one `is None`) ---
+        self.plan = plan                   # FaultPlan or None
+        self.health = health               # HealthTracker or None
+        self.requeue = None                # bound by ControlLoop.__init__
+        self.attempts = np.zeros(ds.n, int)
+        self.failed_q = np.zeros(ds.n, bool)
+        self.failures = 0
+        self.retries = 0
+        self._failed_eids = set()          # events that end in a flake error
+        self._start: Dict[int, float] = {}  # eid -> dispatch time
+        self._health_buf: List = []        # (j, ok, lat) awaiting flush
+
+    # -- health event buffering -------------------------------------------
+    # EWMA folds are order-dependent, so same-timestamp outcomes are
+    # buffered and applied in one canonical sort whenever the clock moves
+    # strictly forward — the racecheck explorer permutes same-time event
+    # pops and the breaker state must not notice.
+    def _record(self, j: int, ok: bool, lat):
+        if self.health is not None:
+            self._health_buf.append((int(j), bool(ok), lat))
+
+    def flush_health(self):
+        if self.health is not None and self._health_buf:
+            for j, ok, lat in sorted(
+                    self._health_buf,
+                    key=lambda e: (e[0], e[1], -1.0 if e[2] is None else e[2])):
+                self.health.record(j, ok, lat, now=self.t)
+            self._health_buf.clear()
+
+    def _set_time(self, t: float):
+        # ANY strict advance must move the clock: ``_wake_at`` hands back
+        # strictly-future deadlines, and refusing a sub-epsilon advance here
+        # would leave the loop spinning on a window timer that never
+        # arrives.  Health events buffered at the old instant flush first,
+        # in canonical order.
+        if t > self.t:
+            self.flush_health()
+            self.t = t
 
     # -- executor duck-type ----------------------------------------------------
     def now(self) -> float:
@@ -147,30 +200,76 @@ class _SimExecutor:
             if self._counts[j] >= self._loads[j]:
                 rejected.append(qi)     # no capacity after all -> requeue
                 continue
+            if self.health is not None and not self.health.admissible(j):
+                rejected.append(qi)     # breaker open / probes exhausted
+                continue
+            if self.plan is not None:
+                cap = self.plan.rate_limit(j, self.t)
+                if cap is not None and self._counts[j] >= cap:
+                    # 429: the endpoint sheds the request; it re-enters the
+                    # ready queue (no retry charged) and health hears of it
+                    self._record(j, False, None)
+                    rejected.append(qi)
+                    continue
+                if self.plan.down(j, self.t):
+                    # connect-time failure on a dead endpoint
+                    self._record(j, False, None)
+                    self._fail_attempt(qi)
+                    continue
             self.assign[qi] = j
             self._dispatch(qi, j)
+            if self.health is not None:
+                self.health.note_admit(j)
         return rejected
 
     def advance(self, wake_at):
         if not self.done_q:
             if wake_at is None:
                 return [], False
-            self.t = max(self.t, wake_at)   # idle: jump to the next arrival
+            self._set_time(wake_at)         # idle: jump to the next arrival
             return [], True
         if wake_at is not None and wake_at < self.done_q[0][0]:
-            self.t = max(self.t, wake_at)   # arrival/window before completion
+            self._set_time(wake_at)         # arrival/window before completion
             return [], True
+        # drain EVERY completion at this instant before handing control
+        # back: the fault plane's retries make mid-run admissions
+        # reachable, and an admission between two equal-time pops would
+        # route against counts that depend on the (arbitrary) pop order —
+        # the schedule race checker permutes exactly that seam.
+        t_group = self.done_q[0][0]
+        done: List[int] = []
+        while self.done_q and self.done_q[0][0] <= t_group + 1e-12:
+            done.extend(self._pop_completion())
+        return done, True
+
+    def _pop_completion(self) -> List[int]:
         ft, eid, qi, j = heapq.heappop(self.done_q)
         if eid in self.cancelled:           # sibling won; capacity was freed
             self.cancelled.discard(eid)
+            self._failed_eids.discard(eid)
+            self._start.pop(eid, None)
             self.live[qi] = [e for e in self.live.get(qi, []) if e[0] != eid]
-            return [], True
-        self.t = max(self.t, ft)
-        self.service_seen.append(float(self.true_service[qi, j]))
+            return []
+        self._set_time(ft)
+        start = self._start.pop(eid, ft)
         self._counts[j] -= 1
         self.live[qi] = [e for e in self.live.get(qi, []) if e[0] != eid]
+        if eid in self._failed_eids:        # transient error fired mid-serve
+            self._failed_eids.discard(eid)
+            self._record(j, False, None)
+            if not self.completed[qi] and not self.live.get(qi):
+                self._fail_attempt(qi)      # no sibling left to save it
+            return []
+        if self.plan is not None and self.plan.down_during(j, start, ft):
+            # the endpoint died while this request was in flight
+            self._record(j, False, None)
+            if not self.completed[qi] and not self.live.get(qi):
+                self._fail_attempt(qi)
+            return []
+        self.service_seen.append(float(self.true_service[qi, j]))
+        self._record(j, True, ft - start)
         if self.completed[qi]:
-            return [], True
+            return []
         self.completed[qi] = True
         self.assign[qi] = j                 # first finisher wins (hedging)
         for sid, sj, sft in self.live.get(qi, []):
@@ -178,7 +277,7 @@ class _SimExecutor:
             self._counts[sj] -= 1
             self.llm_secs -= max(sft - self.t, 0.0)  # un-charge unexecuted tail
         self.live[qi] = []
-        return [qi], True
+        return [qi]
 
     def tick(self):
         self._maybe_hedge()
@@ -187,10 +286,36 @@ class _SimExecutor:
     def _dispatch(self, qi: int, j: int):
         self._counts[j] += 1
         dur = float(self.true_service[qi, j])
+        eid = self.next_eid
+        if self.plan is not None:
+            dur *= self.plan.latency_factor(j, self.t)
+            # transient error: the coin is a stateless hash of (endpoint,
+            # query, attempt) so it's ordering-independent and re-flipped
+            # per retry; the slot is held for fail_frac of the service time
+            if self.plan.flake(j, self.t, qi, int(self.attempts[qi])):
+                dur *= max(min(self.cfg.fail_frac, 1.0), 1e-3)
+                self._failed_eids.add(eid)
+        if self.plan is not None or self.health is not None:
+            self._start[eid] = self.t
         self.llm_secs += dur
-        heapq.heappush(self.done_q, (self.t + dur, self.next_eid, qi, j))
-        self.live.setdefault(qi, []).append((self.next_eid, j, self.t + dur))
+        heapq.heappush(self.done_q, (self.t + dur, eid, qi, j))
+        self.live.setdefault(qi, []).append((eid, j, self.t + dur))
         self.next_eid += 1
+
+    def _fail_attempt(self, qi: int):
+        """A request attempt failed for real (no live sibling): retry with
+        exponential backoff while budget remains, else mark it failed."""
+        self.attempts[qi] += 1
+        self.assign[qi] = -1
+        if self.attempts[qi] <= self.cfg.retry_budget \
+                and self.requeue is not None:
+            self.retries += 1
+            back = self.cfg.backoff_s * (2.0 ** (self.attempts[qi] - 1))
+            self.requeue(qi, self.t + back)
+        else:
+            self.failed_q[qi] = True
+            self.completed[qi] = True
+            self.failures += 1
 
     def _hedge_scan(self):
         # ordering seam: same-finish-time events have no inherent scan
@@ -212,10 +337,15 @@ class _SimExecutor:
             if not np.any(self._counts < self._loads):
                 return
             alt = int(np.argmax(self._loads - self._counts))
+            if (self.health is not None
+                    and not self.health.admissible(alt)):
+                continue
             if alt != j and self._counts[alt] < self._loads[alt]:
                 self.hedged_q[qi] = True
                 self.hedged += 1
                 self._dispatch(qi, alt)
+                if self.health is not None:
+                    self.health.note_admit(alt)
 
 
 def run_serving(ds: QAServe, policy: Policy, cfg: SchedulerConfig) -> ServeResult:
@@ -227,23 +357,33 @@ def run_serving(ds: QAServe, policy: Policy, cfg: SchedulerConfig) -> ServeResul
 
     times = arrivals.make(cfg.arrival, n, rate=cfg.arrival_rate,
                           seed=cfg.seed)
-    executor = _SimExecutor(ds, cfg, loads)
+    health = None
+    if cfg.health:
+        from .health import HealthTracker
+        health = HealthTracker(m, cfg.health_cfg)
+    executor = _SimExecutor(ds, cfg, loads, plan=cfg.fault_plan,
+                            health=health)
     controller = StreamController(policy, horizon=cfg.horizon or n,
-                                  stream=cfg.streaming_dual, rng=rng)
+                                  stream=cfg.streaming_dual, rng=rng,
+                                  health=health)
     fold = FoldBuffer(policy, lambda idxs: ds.subset(np.asarray(idxs, int)),
                       enabled=cfg.fold_online, chunk=cfg.fold_chunk)
     loop = ControlLoop(
         executor=executor, controller=controller, rule=rule,
         items=range(n), features=lambda idx: ds.subset(np.asarray(idx, int)),
         fold=fold, arrival_times=times, window=cfg.window,
-        drain_admissions=True, requeue_front=False)
+        drain_admissions=True, requeue_front=False, health=health)
     loop.run()
+    executor.flush_health()
 
     assign = executor.assign
     ok = assign >= 0
     idxs = np.flatnonzero(ok)
     cost_mat = ds.cost_matrix()
-    sr = float(ds.correct[idxs, assign[idxs]].mean()) if len(idxs) else 0.0
+    # permanently-failed requests count against SR (a dropped query is a
+    # wrong answer as far as the stream's alpha target is concerned)
+    n_acc = len(idxs) + int(executor.failed_q.sum())
+    sr = float(ds.correct[idxs, assign[idxs]].sum() / n_acc) if n_acc else 0.0
     total_cost = float(cost_mat[idxs, assign[idxs]].sum())
     pm_counts = np.bincount(assign[idxs], minlength=m)
     pm_correct = np.zeros(m)
@@ -261,4 +401,6 @@ def run_serving(ds: QAServe, policy: Policy, cfg: SchedulerConfig) -> ServeResul
         per_model_cost=pm_cost, hedged=executor.hedged,
         windows=controller.windows,
         dual_iters=controller.dual_iters if cfg.streaming_dual else 0,
+        failures=executor.failures, retries=executor.retries,
+        breaker_trips=health.trips if health is not None else 0,
     )

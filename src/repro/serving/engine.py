@@ -85,6 +85,8 @@ class Request:
     finished: float = 0.0
     hedged: bool = False
     admit_step: float = 0.0      # engine clock (decode chunk) at admission
+    retries: int = 0             # failed attempts so far (failure plane)
+    failed: bool = False         # permanently failed (retry budget spent)
 
 
 class PageAllocator:
@@ -481,6 +483,9 @@ class _EngineExecutor:
         self.max_steps = max_steps
         self.steps = 0
         self.stopped = False
+        self.requeue = None       # bound by ControlLoop: (req, at_step)
+        self._progress: dict = {}  # id(req) -> (req, len(output), step) for
+        #                            the stranded-request watchdog
 
     def now(self) -> float:
         return float(self.steps)
@@ -497,9 +502,13 @@ class _EngineExecutor:
         # one batch fetch; per-element int() on a device array would sync
         # the host once per request (SC01)
         x = np.asarray(x)
+        srv = self.server
+        plan = srv.fault_plan
+        h = srv.health
+        t = float(self.steps)
         for req, j in zip(items, x):
             j = int(j)
-            ep = self.server.endpoints[j]
+            ep = srv.endpoints[j]
             if not getattr(ep, "can_serve", lambda r: True)(req):
                 # can NEVER fit this endpoint's fixed shapes: fail it cleanly
                 # instead of crashing the server or re-queueing forever
@@ -507,12 +516,31 @@ class _EngineExecutor:
                 req.endpoint = j
                 req.output = []
                 req.finished = time.perf_counter()
-                self.server.completed.append(req)
+                srv.completed.append(req)
                 continue
+            if h is not None and not h.admissible(j):
+                rejected.append(req)    # breaker open / probes exhausted
+                continue
+            if plan is not None:
+                cap = plan.rate_limit(j, t)
+                if cap is not None and ep.active_count() >= cap:
+                    # 429: shed the request back to the queue, health hears
+                    if h is not None:
+                        h.record(j, False, None, now=t)
+                    rejected.append(req)
+                    continue
+                if plan.down(j, t):
+                    # connect-time failure on a dead endpoint
+                    if h is not None:
+                        h.record(j, False, None, now=t)
+                    self._retry_or_fail(req)
+                    continue
             if ep.has_capacity():
                 req.endpoint = j
                 req.admit_step = float(self.steps)
                 ep.admit(req)
+                if h is not None:
+                    h.note_admit(j)
             else:  # paper's queueing: wait for capacity
                 rejected.append(req)
         return rejected
@@ -529,16 +557,38 @@ class _EngineExecutor:
         # dispatch every endpoint's chunk before blocking on any result:
         # jax async dispatch overlaps the whole pool's decode work
         eps = self.server.endpoints
-        pending = [(eps[i], eps[i].step_begin())
-                   for i in self._pool_order(len(eps))]
+        plan = self.server.fault_plan
+        pending = []
+        for i in self._pool_order(len(eps)):
+            if plan is not None and self._fault_skips(i):
+                pending.append((i, eps[i], None))   # faulted: chunk skipped
+            else:
+                pending.append((i, eps[i], eps[i].step_begin()))
         done: List[Request] = []
         progressed = False
-        for e, p in pending:
+        for i, e, p in pending:
             fin = e.step_end(p)
             progressed = progressed or bool(fin) or bool(e.active_count())
             done.extend(fin)
         self.steps += 1
         done = self._resolve_hedges(self._completion_order(done))
+        h = self.server.health
+        events = []                 # (endpoint, ok, latency, rid)
+        if h is not None:
+            for req in done:
+                events.append((int(req.endpoint), True,
+                               float(self.steps) - float(req.admit_step),
+                               int(req.rid)))
+        if plan is not None:
+            self._apply_flakes(plan, events)
+        if self.server.stall_after_chunks > 0:
+            self._watchdog(events)
+        if h is not None:
+            # canonical order: EWMA folds don't commute, and the racecheck
+            # explorer permutes same-chunk completion order — sorting the
+            # chunk's events makes the health state permutation-invariant
+            for j, ok, lat, _ in sorted(events):
+                h.record(j, ok, lat if ok else None, now=float(self.steps))
         self.server.completed.extend(done)
         return done, progressed
 
@@ -551,6 +601,108 @@ class _EngineExecutor:
     def _completion_order(self, done: List[Request]) -> List[Request]:
         return done
 
+    def _fault_candidates(self):
+        # ordering seam (see _pool_order): in-flight requests have no
+        # inherent fault-sweep order within a chunk boundary — the race
+        # checker permutes this to prove flake/watchdog failures commute
+        return [(i, req) for i, ep in enumerate(self.server.endpoints)
+                for req in ep.active_requests()]
+
+    # -- fault injection (server.fault_plan; dormant when None) ----------------
+    def _fault_skips(self, i: int) -> bool:
+        """Whether endpoint ``i`` loses this decode chunk to a fault: a
+        hard-down endpoint makes no progress at all; a latency spike of
+        factor f advances one chunk in every f (so its effective service
+        time stretches by f without touching the paged state)."""
+        plan = self.server.fault_plan
+        t = float(self.steps)
+        if plan.down(i, t):
+            return True
+        f = plan.latency_factor(i, t)
+        if f > 1.0 and self.steps % max(int(round(f)), 1) != 0:
+            return True
+        return False
+
+    def _apply_flakes(self, plan, events):
+        """Transient errors mid-decode: each active request flips a coin
+        keyed on (endpoint, rid, step) — stateless, so the outcome is
+        independent of sweep order and fresh every chunk."""
+        t = float(self.steps)
+        for i, req in self._fault_candidates():
+            if plan.flake(i, t, req.rid, self.steps):
+                if self.server.health is not None:
+                    events.append((int(i), False, 0.0, int(req.rid)))
+                self._fail_request(req)
+
+    def _watchdog(self, events):
+        """Stranded-request detector: a request whose output hasn't grown
+        for ``stall_after_chunks`` chunks (its endpoint is dead or wedged)
+        is cancelled via the normal ``Endpoint.cancel`` path — slot and
+        pages drain to the free lists / dump page — and retried elsewhere."""
+        k = self.server.stall_after_chunks
+        cands = self._fault_candidates()
+        seen = set()
+        for i, req in cands:
+            seen.add(id(req))
+            out_len = len(req.output or ())
+            ent = self._progress.get(id(req))
+            if ent is None or ent[0] is not req or ent[1] != out_len:
+                self._progress[id(req)] = (req, out_len, self.steps)
+                continue
+            if self.steps - ent[2] >= k:
+                del self._progress[id(req)]
+                seen.discard(id(req))
+                if self.server.health is not None:
+                    events.append((int(i), False, 0.0, int(req.rid)))
+                self._fail_request(req)
+        for key in [key for key in self._progress if key not in seen]:
+            del self._progress[key]    # completed/failed: stop tracking
+
+    def _fail_request(self, req: Request):
+        """Remove a live request from the pool after a fault.  A hedged
+        pair fails as a unit (both copies cancelled, the primary retries) —
+        by this point in the chunk ``_resolve_hedges`` has already run, so
+        a pair in ``_hedges`` has both copies still in flight."""
+        srv = self.server
+        pair = srv._hedges.pop(req.rid, None)
+        if pair is not None:
+            primary, pi, shadow, si = pair
+            srv.endpoints[pi].cancel(primary)
+            srv.endpoints[si].cancel(shadow)
+            srv._shadow_ids.discard(id(shadow))
+            self._retry_or_fail(primary)
+            return
+        if id(req) in srv._shadow_ids:
+            srv._shadow_ids.discard(id(req))
+            for ep in srv.endpoints:
+                if ep.cancel(req):
+                    break
+            return                  # the primary carries the retry
+        if not any(ep.cancel(req) for ep in srv.endpoints):
+            return                  # already cancelled earlier this sweep
+        self._retry_or_fail(req)
+
+    def _retry_or_fail(self, req: Request):
+        """Retry with exponential backoff while budget remains, else mark
+        the request permanently failed (counts against the stream's SR)."""
+        srv = self.server
+        req.retries += 1
+        req.endpoint = -1
+        req.hedged = False
+        req.done = False
+        req.output = None
+        if req.retries <= srv.retry_budget and self.requeue is not None:
+            srv.retries += 1
+            back = srv.backoff_steps * (2.0 ** (req.retries - 1))
+            self.requeue(req, float(self.steps) + back)
+        else:
+            req.done = True
+            req.failed = True
+            req.output = []
+            req.finished = time.perf_counter()
+            srv.failures += 1
+            srv.completed.append(req)
+
     def tick(self):
         """Post-event hook (same slot as the simulator's): fire the hedge
         policy.  Runs only between chunks — ``advance`` has synced every
@@ -562,9 +714,11 @@ class _EngineExecutor:
         """Least-loaded endpoint other than the primary that has a free slot
         and fits the request's shapes."""
         best, best_free = None, 0
+        h = self.server.health
         for j, ep in enumerate(self.server.endpoints):
             free = ep.L - ep.active_count()
             if (j != primary and free > best_free and ep.has_capacity()
+                    and (h is None or h.admissible(j))
                     and getattr(ep, "can_serve", lambda r: True)(req)):
                 best, best_free = j, free
         return best
@@ -597,6 +751,8 @@ class _EngineExecutor:
             srv._shadow_ids.add(id(shadow))
             srv._hedges[req.rid] = (req, i, shadow, alt)
             srv.endpoints[alt].admit(shadow)
+            if srv.health is not None:
+                srv.health.note_admit(alt)
             srv.hedged += 1
 
     def _resolve_hedges(self, done: List[Request]) -> List[Request]:
@@ -651,7 +807,9 @@ class MultiLLMServer:
                  batch_size: int = 0, hedge_after_steps: int = 0,
                  fold_online: bool = False, fold_chunk: int = 0,
                  stream: bool = False, horizon: int = 0,
-                 window_steps: float = 0.0):
+                 window_steps: float = 0.0, fault_plan=None, health=None,
+                 retry_budget: int = 2, backoff_steps: float = 4.0,
+                 stall_after_chunks: int = 0):
         self.endpoints = endpoints
         self.policy = policy
         cap = sum(e.L for e in endpoints)
@@ -664,6 +822,19 @@ class MultiLLMServer:
         self.stream = stream
         self.horizon = horizon
         self.window_steps = window_steps
+        # --- failure plane (ISSUE 9); every hot-path consult is gated on
+        # `is not None` / `> 0`, so the off state costs one check ---
+        self.fault_plan = fault_plan         # serving.faults.FaultPlan
+        if health is True:
+            from repro.core.health import HealthTracker
+            health = HealthTracker(len(endpoints))
+        self.health = health                 # core.health.HealthTracker
+        self.retry_budget = retry_budget
+        self.backoff_steps = backoff_steps   # retry k re-enters after 2^k*this
+        self.stall_after_chunks = stall_after_chunks  # watchdog: no output
+        #                                      growth for K chunks -> cancel
+        self.failures = 0                    # requests failed past the budget
+        self.retries = 0                     # attempts re-entered the queue
         self.queue: deque = deque()     # (arrival_step, Request)
         self.completed: List[Request] = []
         self._fold_buf: List[Request] = []   # direct fold-back entry point
@@ -721,7 +892,7 @@ class MultiLLMServer:
         if self._controller is None:
             self._controller = StreamController(
                 self.policy, horizon=self.horizon or len(self.queue),
-                stream=self.stream)
+                stream=self.stream, health=self.health)
         controller = self._controller
         windows0 = controller.windows
         iters0 = controller.dual_iters
@@ -735,7 +906,7 @@ class MultiLLMServer:
             executor=executor, controller=controller, rule=self.rule,
             items=items, features=route_features, fold=fold,
             arrival_times=times, window=self.window_steps,
-            drain_admissions=False, requeue_front=True)
+            drain_admissions=False, requeue_front=True, health=self.health)
         loop.run()
         # an early exit (max_steps) leaves un-served requests in the loop's
         # queues — put them back, REBASED to the fresh clock a later run()
@@ -744,7 +915,7 @@ class MultiLLMServer:
         now = executor.now()
         for req in loop.ready:
             self.queue.append((0.0, req))
-        for at, req in loop.pending:
+        for at, _, req in loop.pending:
             self.queue.append((max(0.0, at - now), req))
         self.route_seconds += controller.route_seconds
         controller.route_seconds = 0.0

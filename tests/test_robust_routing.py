@@ -1,0 +1,517 @@
+"""Failure plane (ISSUE 9): fault injection, circuit breakers, robust
+lower-confidence-bound solves, and the stranded-request watchdog.
+
+Covers the acceptance criteria end to end: ``robust=True, kappa=0`` is
+bit-identical to the non-robust solve on the single-device AND sharded
+paths; the fault plane is structurally zero-overhead when no FaultPlan is
+attached; breaker-enabled robust routing recovers >= 0.95x the healthy
+windowed SR under a mid-stream hard-down without overdrawing the budget
+ledger; and a mid-stream endpoint death drains both paged allocators
+pristine under PageSan.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import (DualSolver, HealthConfig, HealthTracker,
+                        OmniRouter, RetrievalPredictor, RouterConfig,
+                        SchedulerConfig, init_dual_state, run_serving)
+from repro.core.health import CLOSED, HALF_OPEN, OPEN
+from repro.data.qaserve import generate
+from repro.serving import faults
+from repro.serving.faults import FaultPlan, FaultSpec
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _instance(n=128, m=5, seed=0):
+    rng = np.random.default_rng(seed)
+    cost = (rng.uniform(0.2, 3.0, (n, m)) * 1e-3).astype(np.float32)
+    quality = rng.uniform(0.0, 1.0, (n, m)).astype(np.float32)
+    loads = np.full((m,), float(n) / m + 4, np.float32)
+    return cost, quality, loads
+
+
+# ---------------------------------------------------------------------------
+# robust solve: kappa=0 bit-parity, kappa>0 semantics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shards", [1, 4])
+@pytest.mark.parametrize("mode,threshold", [("quality", 0.6),
+                                            ("budget", 0.04)])
+def test_robust_kappa0_bit_identical(shards, mode, threshold):
+    """robust=True, kappa=0 must be BIT-identical to the existing solve —
+    warm across windows, on both the legacy and the blocked/sharded path
+    (shards>1 runs the same blocked machinery the mesh distributes)."""
+    import jax.numpy as jnp
+    cost, qual, loads = _instance()
+    base = DualSolver(mode, iters=60, norm_grad=True, stall_tol=1e-3,
+                      shards=shards)
+    rob = dataclasses.replace(base, robust=True, kappa=0.0)
+    st0 = st1 = init_dual_state(len(loads))
+    for _ in range(3):
+        x0, i0, st0 = base.route_window(cost, qual, threshold, loads, st0)
+        x1, i1, st1 = rob.route_window(cost, qual, threshold, loads, st1)
+        assert bool(jnp.all(jnp.asarray(x0) == jnp.asarray(x1)))
+        assert float(st0.budget_spent) == float(st1.budget_spent)
+        assert float(st0.lam) == float(st1.lam)
+        assert float(st0.sr_deficit) == float(st1.sr_deficit)
+        assert int(i0.iters_run) == int(i1.iters_run)
+
+
+def test_robust_kappa0_bit_identical_with_explicit_std():
+    """Explicit quality_std at kappa=0 is still exact (x - 0.0*sigma)."""
+    import jax.numpy as jnp
+    cost, qual, loads = _instance(seed=2)
+    std = np.random.default_rng(1).uniform(0.0, 0.3,
+                                           qual.shape).astype(np.float32)
+    base = DualSolver("quality", iters=50, norm_grad=True)
+    rob = dataclasses.replace(base, robust=True, kappa=0.0)
+    x0, _, _ = base.route_window(cost, qual, 0.6, loads)
+    x1, _, _ = rob.route_window(cost, qual, 0.6, loads, quality_std=std)
+    assert bool(jnp.all(jnp.asarray(x0) == jnp.asarray(x1)))
+
+
+def test_robust_kappa_tightens_the_quality_target():
+    """kappa>0 solves against q - kappa*sigma: the realized TRUE-quality
+    sum of the robust assignment meets the alpha target evaluated at the
+    LCB, and the banked qsum is pessimistic (<= the plain-q qsum of the
+    same assignment) — the ledger can only under-credit, never overdraw."""
+    import jax.numpy as jnp
+    cost, qual, loads = _instance(n=256, seed=4)
+    rob = DualSolver("quality", iters=120, norm_grad=True, robust=True,
+                     kappa=1.0)
+    # alpha must be feasible AGAINST THE LCB (polish restores quality
+    # feasibility with priority over capacity, by design)
+    alpha = 0.2
+    x, info, st = rob.route_window(cost, qual, alpha, loads)
+    x = np.asarray(x)
+    picked_q = qual[np.arange(len(x)), x]
+    qc = np.clip(qual, 0.0, 1.0)
+    lcb = qual - np.sqrt(qc * (1.0 - qc))
+    picked_lcb = lcb[np.arange(len(x)), x]
+    # the ledger banked the LCB sum, not the optimistic sum
+    banked = -float(st.sr_deficit) + alpha * len(x)
+    assert abs(banked - picked_lcb.sum()) < 1e-2
+    assert picked_lcb.sum() <= picked_q.sum() + 1e-6
+    # and the LCB target is actually met by the polished assignment
+    assert picked_lcb.sum() >= alpha * len(x) - 1e-3
+
+
+@pytest.mark.slow
+def test_robust_kappa0_bit_identical_on_8_device_mesh():
+    """The same parity on a REAL 8-virtual-device query mesh."""
+    snippet = """
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.common.sharding import query_mesh
+        from repro.core.optimizer import DualSolver, init_dual_state
+        rng = np.random.default_rng(0)
+        n, m = 256, 5
+        cost = (rng.uniform(0.2, 3.0, (n, m)) * 1e-3).astype(np.float32)
+        qual = rng.uniform(0.0, 1.0, (n, m)).astype(np.float32)
+        loads = np.full((m,), n / m + 4, np.float32)
+        assert jax.device_count() == 8
+        with query_mesh():
+            base = DualSolver("quality", iters=60, norm_grad=True,
+                              stall_tol=1e-3)
+            rob = DualSolver("quality", iters=60, norm_grad=True,
+                             stall_tol=1e-3, robust=True, kappa=0.0)
+            st0 = st1 = init_dual_state(m)
+            for _ in range(3):
+                x0, _, st0 = base.route_window(cost, qual, 0.6, loads, st0)
+                x1, _, st1 = rob.route_window(cost, qual, 0.6, loads, st1)
+                assert bool(jnp.all(x0 == x1))
+                assert float(st0.budget_spent) == float(st1.budget_spent)
+        print("MESH-PARITY-OK")
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(snippet)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "MESH-PARITY-OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: determinism + fault models
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_is_deterministic_and_windowed():
+    plan = FaultPlan({0: (FaultSpec("hard_down", start=2.0, end=5.0),),
+                      1: (FaultSpec("error_rate", rate=0.5),),
+                      2: (FaultSpec("latency_spike", start=1.0, factor=3.0),
+                          FaultSpec("rate_limit", capacity=2))}, seed=7)
+    assert not plan.down(0, 1.9) and plan.down(0, 2.0)
+    assert plan.down(0, 4.99) and not plan.down(0, 5.0)
+    assert plan.down_during(0, 0.0, 2.5) and not plan.down_during(0, 5.0, 9.0)
+    assert plan.latency_factor(2, 0.5) == 1.0
+    assert plan.latency_factor(2, 1.5) == 3.0
+    assert plan.rate_limit(2, 0.0) == 2 and plan.rate_limit(1, 0.0) is None
+    # coins: identical under re-query, fresh per attempt, ~rate on average
+    coins = [plan.flake(1, 0.0, qi, 0) for qi in range(2000)]
+    assert coins == [plan.flake(1, 0.0, qi, 0) for qi in range(2000)]
+    assert 0.4 < np.mean(coins) < 0.6
+    assert any(plan.flake(1, 0.0, 3, a) != coins[3] for a in range(1, 8))
+    # no error_rate spec on endpoint 0 -> never flakes
+    assert not any(plan.flake(0, 0.0, qi, 0) for qi in range(50))
+
+
+def test_fault_plan_counters_track_consults():
+    faults.reset_counters()
+    plan = FaultPlan({0: (FaultSpec("hard_down"),)})
+    plan.down(0, 0.0)
+    plan.down(1, 0.0)
+    assert faults.counters["checks"] == 2
+    assert faults.counters["injected"] == 1
+    faults.reset_counters()
+
+
+# ---------------------------------------------------------------------------
+# HealthTracker: breaker state machine
+# ---------------------------------------------------------------------------
+
+def _cfg(**kw):
+    base = dict(ewma_alpha=0.5, open_threshold=0.5, close_threshold=0.3,
+                min_events=2, cooldown=4.0, probe_slots=1, probe_successes=2)
+    base.update(kw)
+    return HealthConfig(**base)
+
+
+def test_breaker_trips_cools_down_probes_and_closes():
+    h = HealthTracker(2, _cfg())
+    assert h.admissible(0) and h.state_name(0) == "closed"
+    h.record(0, False, now=0.0)            # ewma 0.5, min_events not met
+    assert h.breaker_state[0] == CLOSED
+    h.record(0, False, now=1.0)            # ewma 0.75 > 0.5 -> OPEN
+    assert h.breaker_state[0] == OPEN and not h.admissible(0)
+    assert h.trips == 1
+    assert (h.effective_loads([4.0, 4.0]) == [0.0, 4.0]).all()
+    # cooldown not elapsed: still open; next_wake points at the expiry
+    h.advance(2.0)
+    assert h.breaker_state[0] == OPEN
+    assert h.next_wake(2.0) == pytest.approx(5.0)
+    h.advance(5.0)                         # cooldown over -> HALF_OPEN
+    assert h.breaker_state[0] == HALF_OPEN
+    assert (h.effective_loads([4.0, 4.0]) == [1.0, 4.0]).all()  # probe slot
+    # one probe slot: admissible until a probe is in flight
+    assert h.admissible(0)
+    h.note_admit(0)
+    assert not h.admissible(0)
+    h.record(0, True, latency=1.0, now=6.0)     # probe 1 wins; ewma decays
+    assert h.breaker_state[0] == HALF_OPEN      # needs 2 wins + low ewma
+    h.note_admit(0)
+    h.record(0, True, latency=1.0, now=7.0)
+    assert h.breaker_state[0] == CLOSED         # ewma 0.1875 <= 0.3, 2 wins
+    assert h.admissible(0)
+
+
+def test_half_open_probe_failure_reopens():
+    h = HealthTracker(1, _cfg())
+    h.record(0, False, now=0.0)
+    h.record(0, False, now=0.0)
+    assert h.breaker_state[0] == OPEN
+    h.advance(10.0)
+    assert h.breaker_state[0] == HALF_OPEN
+    h.note_admit(0)
+    h.record(0, False, now=10.0)           # failed probe -> straight back
+    assert h.breaker_state[0] == OPEN and h.trips == 2
+    assert h.open_until[0] == pytest.approx(14.0)
+
+
+def test_hysteresis_band_keeps_breaker_open():
+    """close_threshold < open_threshold: wins alone don't close the breaker
+    while the failure EWMA is still inside the hysteresis band."""
+    h = HealthTracker(1, _cfg(ewma_alpha=0.05))
+    for _ in range(30):
+        h.record(0, False, now=0.0)
+    assert h.breaker_state[0] == OPEN
+    h.advance(99.0)
+    for k in range(2):
+        h.note_admit(0)
+        h.record(0, True, latency=1.0, now=99.0)
+    # two wins but ewma ~0.7 still > close_threshold -> stays half-open
+    assert h.breaker_state[0] == HALF_OPEN
+
+
+def test_price_multiplier_is_conservative():
+    h = HealthTracker(3)
+    assert (h.price_multiplier() == 1.0).all()      # no data -> neutral
+    h.record(0, True, latency=1.0)
+    h.record(1, True, latency=1.0)
+    h.record(2, True, latency=8.0)
+    pm = h.price_multiplier()
+    assert pm[2] > 1.0                              # slow endpoint repriced
+    assert (pm >= 1.0).all()                        # NEVER below 1: the
+    #                       repriced predicted cost only over-estimates, so
+    #                       the budget ledger stays a safe upper bound
+    assert pm[2] <= h.cfg.latency_cap
+
+
+def test_effective_loads_is_idempotent_and_pure():
+    h = HealthTracker(2, _cfg())
+    h.record(0, False, now=0.0)
+    h.record(0, False, now=0.0)
+    loads = np.array([4.0, 4.0])
+    out1 = h.effective_loads(loads)
+    out2 = h.effective_loads(out1)
+    assert (out1 == out2).all()
+    assert (loads == [4.0, 4.0]).all()              # input untouched
+
+
+# ---------------------------------------------------------------------------
+# simulator: fault plane end to end
+# ---------------------------------------------------------------------------
+
+def _sim_pool(n=400, seed=3):
+    ds = generate(n=n, seed=seed)
+    train, _, test = ds.split(0.5, 0.0, seed=0)
+    return train, test
+
+
+def _sim_router(train, **kw):
+    return OmniRouter(RetrievalPredictor(k=8).fit(train),
+                      RouterConfig(alpha=0.5, **kw))
+
+
+def test_sim_faults_zero_overhead_when_unattached():
+    """No FaultPlan, no health: a full streaming run may not consult the
+    fault plane once (structural counter assert, PR 8 style)."""
+    train, test = _sim_pool()
+    faults.reset_counters()
+    before = dict(faults.counters)
+    res = run_serving(test, _sim_router(train), SchedulerConfig(
+        arrival="poisson", arrival_rate=40, window=0.25,
+        streaming_dual=True))
+    assert faults.counters == before == {"checks": 0, "injected": 0}
+    assert res.failures == 0 and res.retries == 0 and res.breaker_trips == 0
+
+
+def test_sim_transient_flakes_retry_and_recover():
+    """A flaky endpoint: failed attempts re-enter admission with backoff
+    and (almost) everything completes within the retry budget."""
+    train, test = _sim_pool()
+    plan = FaultPlan({0: (FaultSpec("error_rate", rate=0.6),)}, seed=2)
+    res = run_serving(test, _sim_router(train), SchedulerConfig(
+        arrival="poisson", arrival_rate=40, window=0.25,
+        streaming_dual=True, fault_plan=plan, health=True, retry_budget=3))
+    assert res.retries > 0
+    assert res.success_rate > 0.4          # retries kept the stream alive
+
+
+def test_sim_hard_down_breaker_recovers_sr():
+    """Mid-stream hard-down of one endpoint: naive routing keeps feeding
+    the corpse and SR collapses; breaker+robust routing recovers to
+    >= 0.95x the healthy-pool SR (the ISSUE 9 acceptance bar)."""
+    train, test = _sim_pool()
+    mk = lambda: SchedulerConfig(arrival="poisson", arrival_rate=40,
+                                 window=0.25, streaming_dual=True)
+    healthy = run_serving(test, _sim_router(train), mk())
+    plan = FaultPlan({0: (FaultSpec("hard_down", start=1.0),)}, seed=1)
+    naive = run_serving(test, _sim_router(train), dataclasses.replace(
+        mk(), fault_plan=plan, retry_budget=1))
+    robust = run_serving(test, _sim_router(train, robust=True, kappa=0.5),
+                         dataclasses.replace(mk(), fault_plan=plan,
+                                             health=True))
+    assert naive.failures > 0
+    assert robust.success_rate >= 0.95 * healthy.success_rate
+    assert robust.success_rate > naive.success_rate
+    assert robust.breaker_trips >= 1
+    assert robust.failures == 0            # breaker rerouted every query
+
+
+@pytest.mark.slow
+def test_sim_budget_mode_never_overspends_under_faults():
+    """Budget-mode stream with a mid-run hard-down: the realized spend of
+    the breaker-enabled robust stream stays within the global budget.  The
+    ledger's contract is "never overspend a *feasible* budget": B must
+    cover the per-window floors PLUS the outage detour premium (fenced
+    endpoint -> pricier columns for mid-outage arrivals), so it sits at
+    0.8 of the c_min..c_best span — still binding (realized spend keeps
+    rising if B is raised further), but conserved."""
+    train, test = _sim_pool(n=600, seed=5)
+    cost = test.cost_matrix()
+    c_min = float(cost.min(1).sum())
+    c_best = float(cost[np.arange(test.n), test.correct.argmax(1)].sum())
+    B = c_min + 0.8 * (c_best - c_min)
+    plan = FaultPlan({1: (FaultSpec("hard_down", start=1.0, end=6.0),)},
+                     seed=3)
+    res = run_serving(
+        test, OmniRouter(RetrievalPredictor(k=8).fit(train),
+                         RouterConfig(budget=B, robust=True, kappa=0.5)),
+        SchedulerConfig(arrival="poisson", arrival_rate=60, window=0.25,
+                        streaming_dual=True, horizon=test.n,
+                        fault_plan=plan, health=True))
+    assert res.cost <= B * 1.0001
+    assert res.success_rate > 0.0
+    assert res.breaker_trips >= 1
+
+
+def test_sim_rate_limit_sheds_load():
+    train, test = _sim_pool()
+    plan = FaultPlan({0: (FaultSpec("rate_limit", capacity=1),)}, seed=0)
+    res = run_serving(test, _sim_router(train), SchedulerConfig(
+        arrival="poisson", arrival_rate=40, window=0.25,
+        streaming_dual=True, fault_plan=plan, health=True))
+    # every query still completes (shed requests re-enter the ready queue)
+    assert res.failures == 0
+    assert res.per_model_counts.sum() == test.n
+
+
+# ---------------------------------------------------------------------------
+# racecheck: breaker transitions commute with event order
+# ---------------------------------------------------------------------------
+
+def test_racecheck_sim_fault_scenario_is_interleaving_independent():
+    """Permuted same-timestamp fail/complete/probe events: assignment,
+    failure set, and realized cost are identical across seeds, and no
+    permutation ever admits through an OPEN breaker."""
+    from repro.analysis.sanitize import racecheck
+    from repro.core.baselines import BalanceAware
+
+    def make_args():
+        ds = generate(n=48, seed=0)
+        ds.out_len[:, :] = 40              # maximal finish-time ties
+        plan = FaultPlan({0: (FaultSpec("hard_down", start=0.2, end=2.0),),
+                          1: (FaultSpec("error_rate", rate=0.3),)}, seed=4)
+        return ds, BalanceAware(), SchedulerConfig(
+            loads=8, seed=3, fault_plan=plan, health=True, retry_budget=2)
+
+    report = racecheck.explore_sim_schedules(make_args, seeds=(0, 1, 2))
+    assert report.runs == 3
+
+
+def test_racecheck_breaker_open_admit_is_caught():
+    """The breaker invariant actually bites: an OPEN endpoint gaining an
+    in-flight request raises, equal-or-shrinking in-flight does not.  (The
+    executors themselves refuse such admissions, so the permuting harness
+    can only prove the negative — this pins the checker's teeth directly.)"""
+    from repro.analysis.sanitize import racecheck
+
+    h = HealthTracker(2, HealthConfig(min_events=1, open_threshold=0.2))
+    h.record(0, False, now=0.0)
+    assert h.breaker_state[0] == OPEN
+    racecheck._check_no_open_admits(h, [1, 0], [1, 2])   # growth on closed: ok
+    racecheck._check_no_open_admits(h, [1, 0], [0, 0])   # drain on open: ok
+    racecheck._check_no_open_admits(None, [0, 0], [9, 9])  # no tracker: no-op
+    with pytest.raises(racecheck.RaceCheckError, match="admitted while OPEN"):
+        racecheck._check_no_open_admits(h, [0, 0], [1, 0])
+
+
+# ---------------------------------------------------------------------------
+# engine: mid-stream endpoint death, watchdog, PageSan drain
+# ---------------------------------------------------------------------------
+
+def _smoke_endpoints():
+    import jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.serving.engine import Endpoint
+    return [Endpoint(dataclasses.replace(get_smoke_config(a),
+                                         dtype=jnp.float32),
+                     max_concurrency=2, t_max=32, page_size=8,
+                     sync_every=2, seed=i)
+            for i, a in enumerate(["h2o-danube-3-4b", "hymba-1.5b"])]
+
+
+@pytest.mark.slow
+@pytest.mark.sanitize("pagesan")
+def test_engine_mid_stream_death_drains_pristine():
+    """Satellite 1 regression: endpoint 0 dies mid-decode.  The watchdog
+    detects the stalled requests (no output growth for K chunks), cancels
+    them via Endpoint.cancel — slots and pages drain back to the free
+    lists — and retries them on the surviving endpoint.  Both allocators
+    come back pristine under PageSan and the breaker ends OPEN."""
+    from repro.core.baselines import BalanceAware
+    from repro.serving.engine import (MultiLLMServer, Request,
+                                      null_route_features)
+
+    eps = _smoke_endpoints()
+    rng = np.random.RandomState(3)
+    plan = FaultPlan({0: (FaultSpec("hard_down", start=6.0),)}, seed=0)
+    srv = MultiLLMServer(eps, BalanceAware(), batch_size=2,
+                         fault_plan=plan, health=True,
+                         retry_budget=4, backoff_steps=2.0,
+                         stall_after_chunks=3)
+    prompts = [rng.randint(1, 500, (9,)).astype(np.int32) for _ in range(6)]
+    for i, p in enumerate(prompts):
+        srv.submit(Request(rid=i, tokens=p, max_new=12))
+    done = srv.run(null_route_features, max_steps=400)
+    rids = sorted(r.rid for r in done)
+    assert rids == list(range(len(prompts)))       # every request resolved
+    assert all(not r.failed for r in done)         # retry path saved them
+    assert srv.retries > 0
+    # the corpse tripped and is still fenced out of the workload
+    # constraint: OPEN, or HALF_OPEN if the cooldown elapsed right at the
+    # end of the run (a canary probe against a hard-down endpoint re-opens)
+    assert srv.health.trips >= 1
+    assert int(srv.health.breaker_state[0]) in (OPEN, HALF_OPEN)
+    for ep in eps:
+        assert ep.active_count() == 0
+        assert len(ep.alloc.free_slots) == ep.alloc.n_slots
+        assert len(ep.alloc.free_pages) == ep.alloc.n_pages - 1
+        if ep.alloc.san is not None:
+            ep.alloc.san.assert_drained(ep)
+
+
+@pytest.mark.slow
+def test_engine_faults_zero_overhead_when_unattached():
+    from repro.core.baselines import BalanceAware
+    from repro.serving.engine import (MultiLLMServer, Request,
+                                      null_route_features)
+
+    eps = _smoke_endpoints()
+    rng = np.random.RandomState(1)
+    srv = MultiLLMServer(eps, BalanceAware(), batch_size=2)
+    for i in range(4):
+        srv.submit(Request(rid=i, tokens=rng.randint(1, 500, (9,)),
+                           max_new=6))
+    faults.reset_counters()
+    before = dict(faults.counters)
+    done = srv.run(null_route_features)
+    assert len(done) == 4
+    assert faults.counters == before == {"checks": 0, "injected": 0}
+    assert srv.failures == 0 and srv.retries == 0
+
+
+@pytest.mark.slow
+def test_racecheck_engine_fault_scenario_is_interleaving_independent():
+    """Satellite 2: permuted fail/complete/probe orderings in the ENGINE
+    under an injected mid-stream death + flaky sibling — identical
+    fingerprints (rid, done, failed, output) across seeds, allocators
+    drain, and no permutation admits through an OPEN breaker."""
+    from repro.analysis import sanitize
+    from repro.analysis.sanitize import racecheck
+    from repro.core.baselines import BalanceAware
+    from repro.serving.engine import (MultiLLMServer, Request,
+                                      null_route_features)
+
+    with sanitize.enabled("pagesan"):
+        eps = _smoke_endpoints()
+        rng = np.random.RandomState(5)
+        prompts = [rng.randint(1, 500, (9,)).astype(np.int32)
+                   for _ in range(5)]
+
+        def make_server():
+            plan = FaultPlan(
+                {0: (FaultSpec("hard_down", start=6.0, end=40.0),),
+                 1: (FaultSpec("error_rate", rate=0.05),)}, seed=1)
+            srv = MultiLLMServer(eps, BalanceAware(), batch_size=2,
+                                 hedge_after_steps=4, fault_plan=plan,
+                                 health=True, retry_budget=3,
+                                 backoff_steps=2.0, stall_after_chunks=3)
+            for i, p in enumerate(prompts):
+                srv.submit(Request(rid=i, tokens=p, max_new=8))
+            return srv, null_route_features
+
+        report = racecheck.explore_engine_schedules(make_server,
+                                                    seeds=(0, 1, 2),
+                                                    max_steps=600)
+    assert report.runs == 3
+    assert len(report.fingerprint) == len(prompts)

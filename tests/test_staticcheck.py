@@ -319,6 +319,37 @@ def test_sc07_exempts_the_defining_module(tmp_path):
     assert "SC07" not in _rules(found)
 
 
+# --- SC09 health-state discipline --------------------------------------------
+
+SC09_BAD = """
+    def force_close(health):
+        health.breaker_state[0] = 0          # bypasses the state machine
+        health.fail_ewma[:] = 0.0            # erases the hysteresis history
+        health.trips += 1
+        health.probe_wins.fill(5)
+        del health.open_until
+"""
+
+SC09_GOOD = """
+    class HealthTracker:
+        def record(self, j, ok):
+            self.fail_ewma[j] += 0.35 * ((0.0 if ok else 1.0)
+                                         - self.fail_ewma[j])
+            self.breaker_state[j] = 1        # the owner may mutate
+
+    def read_only(health, loads):
+        open_mask = health.breaker_state == 1    # reads are fine
+        return health.effective_loads(loads), open_mask
+"""
+
+
+def test_sc09_fires_on_bad_and_not_on_good(tmp_path):
+    bad = _scan(tmp_path / "bad", {"src/repro/mod.py": SC09_BAD})
+    assert [f.rule for f in bad].count("SC09") == 5
+    good = _scan(tmp_path / "good", {"src/repro/mod.py": SC09_GOOD})
+    assert "SC09" not in _rules(good)
+
+
 # --- SC08 drain-contract -----------------------------------------------------
 
 SC08_BAD_TEST = """
