@@ -28,6 +28,7 @@ MODULES = [
     ("streaming", "benchmarks.bench_streaming"),  # writes BENCH_streaming.json
     ("sharded", "benchmarks.bench_sharded"),      # writes BENCH_sharded.json
     ("robust", "benchmarks.bench_robust"),        # writes BENCH_robust.json
+    ("speculative", "benchmarks.bench_speculative"),  # BENCH_speculative.json
     ("roofline", "benchmarks.bench_roofline"),
 ]
 

@@ -153,6 +153,15 @@ class PageSan:
                     self._fail(f"cross-slot aliasing: page {p} owned by "
                                f"slots {owner[p]} and {s}")
                 owner[p] = s
+            # speculative rollback discipline: releasing rejected draft
+            # pages must never cut into the accepted prefix — a spec slot
+            # keeps at least ceil(lens / page_size) pages between rounds
+            if s in getattr(ep, "spec_slots", ()):
+                need = -(-int(ep.lens[s]) // ep.page_size)
+                if len(pages) < need:
+                    self._fail(f"speculative rollback cut into the accepted "
+                               f"prefix of slot {s}: {len(pages)} page(s) "
+                               f"cannot cover {int(ep.lens[s])} tokens")
             # next token write must land on a real page while decoding
             if ep.remaining[s] > 0:
                 wpos = int(ep.lens[s]) // ep.page_size

@@ -21,7 +21,8 @@ def main(argv: list[str] | None = None) -> int:
         description="JAX/Pallas-aware lint for the repo's recurring bug "
         "classes (SC01 host-sync, SC02 retrace-hazard, SC03 kernel-contract, "
         "SC04 unsafe-reduction, SC05 grid-contract, SC06 allocator-"
-        "discipline, SC07 ledger-discipline, SC08 drain-contract).",
+        "discipline, SC07 ledger-discipline, SC08 drain-contract, "
+        "SC09 health-state discipline, SC10 speculative-contract).",
     )
     ap.add_argument("paths", nargs="*", default=["src/repro"],
                     help="files or directories to scan (default: src/repro)")

@@ -880,6 +880,94 @@ def check_drain_contract(modules: list[Module], repo_root: Path) -> list[Finding
     return findings
 
 
+# ---------------------------------------------------------------------------
+# SC10 speculative-contract
+# ---------------------------------------------------------------------------
+# The speculative cascade's acceptance loop is correctness-critical host
+# code sitting right next to device results: the cheap-looking shapes are a
+# per-token host sync (int()/bool() on a device value, or a Python branch
+# on one) and page rollback that bypasses the allocator's owners.  SC10
+# refuses both inside speculative/acceptance code.
+
+SPEC_NAME_RE = re.compile(
+    r"(^|_)(spec\w*|speculat\w*|accept\w*|draft\w*|verify\w*)", re.I)
+DEVICE_SYNC_CASTS = {"int", "bool", "float"}
+ALLOC_METHODS = {"alloc_pages", "release_pages", "alloc_slot", "release_slot"}
+
+
+def _tracer_call_in(expr: ast.expr) -> str | None:
+    """First tracer-valued jnp/lax call inside ``expr``, if any."""
+    for c in ast.walk(expr):
+        if (
+            isinstance(c, ast.Call)
+            and isinstance(c.func, ast.Attribute)
+            and isinstance(c.func.value, ast.Name)
+            and c.func.value.id in TRACER_MODULES
+            and c.func.attr not in STATIC_JNP_ATTRS
+        ):
+            return f"{c.func.value.id}.{c.func.attr}"
+    return None
+
+
+def _check_sc10(mod: Module) -> list[Finding]:
+    findings: list[Finding] = []
+
+    class V(_ClassStackVisitor):
+        def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+            self._visit_func(node)
+
+        def visit_AsyncFunctionDef(self, node: ast.AsyncFunctionDef) -> None:
+            self._visit_func(node)
+
+        def _visit_func(self, fnode) -> None:
+            if not SPEC_NAME_RE.search(fnode.name):
+                self.generic_visit(fnode)
+                return
+            for n in ast.walk(fnode):
+                test = (n.test
+                        if isinstance(n, (ast.If, ast.While, ast.IfExp))
+                        else None)
+                if test is not None:
+                    hit = _tracer_call_in(test)
+                    if hit is not None:
+                        findings.append(Finding(
+                            mod.rel, n.lineno, "SC10",
+                            f"Python branch on device value `{hit}(...)` in "
+                            f"speculative/acceptance code `{fnode.name}`: "
+                            "acceptance decisions must stay on device "
+                            "(jnp.where / cumprod prefix) with ONE batched "
+                            "host sync per round."))
+                if (isinstance(n, ast.Call) and isinstance(n.func, ast.Name)
+                        and n.func.id in DEVICE_SYNC_CASTS and n.args):
+                    hit = _tracer_call_in(n.args[0])
+                    if hit is not None:
+                        findings.append(Finding(
+                            mod.rel, n.lineno, "SC10",
+                            f"`{n.func.id}()` on device value `{hit}(...)` "
+                            f"in speculative/acceptance code `{fnode.name}` "
+                            "syncs the host per value; compute acceptance "
+                            "in-jit and fetch the round's results with one "
+                            "batched np.asarray / jax.device_get."))
+                if (isinstance(n, ast.Call)
+                        and isinstance(n.func, ast.Attribute)
+                        and n.func.attr in ALLOC_METHODS
+                        and not self._inside_owner()):
+                    recv = _unwrap_subscripts(n.func.value)
+                    if isinstance(recv, ast.Attribute) and recv.attr == "alloc":
+                        findings.append(Finding(
+                            mod.rel, n.lineno, "SC10",
+                            f"draft KV pages {n.func.attr.split('_')[0]}'d by "
+                            "reaching through `.alloc` outside PageAllocator/"
+                            "Endpoint: route speculative page churn through "
+                            "Endpoint methods (ensure_pages / rollback_pages "
+                            "/ release_spec) so the block table and PageSan's "
+                            "shadow stay consistent."))
+            self.generic_visit(fnode)
+
+    V(ALLOC_OWNERS).visit(mod.tree)
+    return findings
+
+
 def check_module(mod: Module, graph: CallGraph) -> list[Finding]:
     out: list[Finding] = []
     out += _check_sc01(mod, graph)
@@ -889,4 +977,5 @@ def check_module(mod: Module, graph: CallGraph) -> list[Finding]:
     out += _check_sc06(mod)
     out += _check_sc07(mod)
     out += _check_sc09(mod)
+    out += _check_sc10(mod)
     return out

@@ -4,8 +4,8 @@
 # scheduler, baselines.
 from .baselines import (BalanceAware, Oracle, PerceptionOnly, Policy,  # noqa: F401
                         RandomPolicy, RouteBatch, S3Cost)
-from .control import (AdmissionRule, ControlLoop, FoldBuffer,  # noqa: F401
-                      StreamController)
+from .control import (AdaptiveWindow, AdmissionRule, ControlLoop,  # noqa: F401
+                      FoldBuffer, StreamController)
 from .features import featurize, featurize_tokens, projection  # noqa: F401
 from .health import HealthConfig, HealthTracker  # noqa: F401
 from .hybrid import HybridConfig, HybridPredictor  # noqa: F401
@@ -18,3 +18,5 @@ from .retrieval import RetrievalPredictor, VectorStore  # noqa: F401
 from .router import OmniRouter, RouterConfig, evaluate_assignment  # noqa: F401
 from .scheduler import (SchedulerConfig, ServeResult, route_via_batch,  # noqa: F401
                         run_serving)
+from .speculative import (AcceptanceTracker, SpecPair,  # noqa: F401
+                          expand_pair_columns, pair_index_arrays)

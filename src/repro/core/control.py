@@ -72,6 +72,51 @@ class AdmissionRule:
                           self.max_inflight - inflight))
 
 
+class AdaptiveWindow:
+    """Adaptive routing-window width: hold the routing overhead near a
+    target (carried from the streaming PR's open item).
+
+    Each routed window runs a dual solve whose cost shows up as that
+    window's ``dual_iters``; the window width trades that overhead against
+    admission latency.  After every window: a solve past ``target_iters``
+    WIDENS the window (more queries amortize one solve), a cheap solve
+    left with a backlog deeper than ``deep_queue`` NARROWS it (admission
+    is falling behind a cheap router).  Width stays clamped to
+    ``[lo, hi]``."""
+
+    def __init__(self, window: float, *, lo: float = 1.0, hi: float = 64.0,
+                 target_iters: int = 50, deep_queue: int = 16,
+                 grow: float = 1.5, shrink: float = 2 / 3):
+        if not (0 < lo <= window <= hi):
+            raise ValueError(f"need 0 < lo <= window <= hi, got "
+                             f"{lo} / {window} / {hi}")
+        if not (shrink < 1.0 < grow):
+            raise ValueError(f"need shrink < 1 < grow, got {shrink}/{grow}")
+        self.window = float(window)
+        self.lo = float(lo)
+        self.hi = float(hi)
+        self.target_iters = int(target_iters)
+        self.deep_queue = int(deep_queue)
+        self.grow = float(grow)
+        self.shrink = float(shrink)
+        self.widened = 0
+        self.narrowed = 0
+
+    def update(self, iters_run: int, queue_depth: int) -> float:
+        """Fold one routed window's observed cost + backlog; returns the
+        width the NEXT window should use."""
+        if iters_run > self.target_iters:
+            nxt = min(self.window * self.grow, self.hi)
+            self.widened += int(nxt != self.window)
+            self.window = nxt
+        elif (iters_run < self.target_iters // 2
+                and queue_depth > self.deep_queue):
+            nxt = max(self.window * self.shrink, self.lo)
+            self.narrowed += int(nxt != self.window)
+            self.window = nxt
+        return self.window
+
+
 class StreamController:
     """Routing side of the stream: persistent dual state + horizon shares.
 
@@ -84,12 +129,14 @@ class StreamController:
     """
 
     def __init__(self, policy: Policy, *, horizon: int = 0,
-                 stream: bool = True, rng=None, health=None):
+                 stream: bool = True, rng=None, health=None,
+                 adapt_window: Optional[AdaptiveWindow] = None):
         self.policy = policy
         self.stream = stream
         self.horizon = int(horizon)
         self.rng = rng
         self.health = health    # optional HealthTracker (failure plane)
+        self.adapt_window = adapt_window  # optional adaptive window sizing
         self.state: Optional[DualState] = None
         self.routed = 0
         self.windows = 0
@@ -315,7 +362,14 @@ class ControlLoop:
         if take <= 0:
             return False
         batch = [self.ready.popleft() for _ in range(take)]
+        iters0 = self.controller.dual_iters
         x = self.controller.route(self.features(batch), loads, counts)
+        aw = self.controller.adapt_window
+        if aw is not None and self.window > 0:
+            # widen/narrow the NEXT window from this one's solve cost and
+            # the backlog it left behind
+            self.window = aw.update(self.controller.dual_iters - iters0,
+                                    len(self.ready))
         rejected = ex.dispatch(batch, x)
         for item in (reversed(rejected) if self.requeue_front else rejected):
             if self.requeue_front:

@@ -38,6 +38,7 @@ from repro.data.qaserve import QAServe
 from repro.data import tokenizer
 from .baselines import Policy, RouteBatch
 from .optimizer import DualSolver, DualState, init_dual_state
+from .speculative import AcceptanceTracker, expand_pair_columns, pair_index_arrays
 
 
 @dataclasses.dataclass
@@ -71,6 +72,12 @@ class RouterConfig:
     # is bit-identical to robust off.
     robust: bool = False
     kappa: float = 1.0
+    # speculative cascade (ISSUE 10): (draft, verify) SpecPair columns grow
+    # the streaming solve to (N, M + P) — pair p costs
+    # c_draft + c_verify / E[accepted] and carries the verify model's
+    # quality (greedy speculative decode is output-identical to the verify
+    # model alone).  () is bit-neutral: the solve is exactly today's.
+    spec_pairs: tuple = ()
 
 
 class OmniRouter(Policy):
@@ -95,6 +102,12 @@ class OmniRouter(Policy):
             stall_tol=cfg.stall_tol, stall_patience=cfg.stall_patience,
             norm_grad=True, shards=cfg.shards,
             robust=cfg.robust, kappa=cfg.kappa)
+        # speculative cascade: pair columns + the acceptance EWMAs that
+        # reprice them (the engine records verify rounds into the tracker;
+        # expected() re-enters the fused solve as a runtime array)
+        self.pairs = tuple(cfg.spec_pairs)
+        self.acceptance = (AcceptanceTracker(self.pairs) if self.pairs
+                           else None)
         self.route_seconds = 0.0    # scheduling-overhead accounting (Fig. 3)
         self.predict_seconds = 0.0
         self._dual_iters = 0        # synced portion of the iteration count
@@ -200,17 +213,38 @@ class OmniRouter(Policy):
         solver = self.stream_solver
         margin = self.cfg.alpha_margin
         predict = self._sharded_predict(plan)
+        pairs = self.pairs
+        didx, vidx = pair_index_arrays(pairs)
 
         def fused(inputs, tokens, input_len, price_in, price_out, avail,
-                  threshold, state, share, n_valid=None):
+                  threshold, state, share, e_acc=None, n_valid=None):
             cap, cost = predict(inputs, tokens, input_len, price_in,
                                 price_out)
+            if pairs:
+                # pair columns splice in between predict and solve, INSIDE
+                # the jit boundary: the acceptance EWMA is a runtime array,
+                # so repricing never retraces
+                cost, cap = expand_pair_columns(cost, cap, didx, vidx, e_acc)
             return solver.route_window(cost, cap, threshold, avail, state,
                                        share=share, polish_margin=margin,
                                        n_valid=n_valid)
 
-        if masked:
+        # jit signatures are positional: fix one per (pairs?, masked?) so
+        # optional args never shift position between calls
+        if pairs and masked:
             return jax.jit(fused)
+        if pairs:
+            def paired(inputs, tokens, input_len, price_in, price_out, avail,
+                       threshold, state, share, e_acc):
+                return fused(inputs, tokens, input_len, price_in, price_out,
+                             avail, threshold, state, share, e_acc)
+            return jax.jit(paired)
+        if masked:
+            def masked_fn(inputs, tokens, input_len, price_in, price_out,
+                          avail, threshold, state, share, n_valid):
+                return fused(inputs, tokens, input_len, price_in, price_out,
+                             avail, threshold, state, share, None, n_valid)
+            return jax.jit(masked_fn)
 
         def unmasked(inputs, tokens, input_len, price_in, price_out, avail,
                      threshold, state, share):
@@ -244,10 +278,14 @@ class OmniRouter(Policy):
         of a padded window (padding rows are masked out of the ledger).
         Returns ``(assignment, new_state)``."""
         if state is None:
-            state = init_dual_state(batch.m)
+            # pair columns extend the multiplier/ledger axis: the warm-start
+            # state spans all M + P columns of the streaming solve
+            state = init_dual_state(batch.m + len(self.pairs))
         state_in = state
         threshold = (self.cfg.budget if self.cfg.budget is not None
                      else self.cfg.alpha)
+        e_acc = (jnp.asarray(self.acceptance.expected(), jnp.float32)
+                 if self.pairs else None)
         if hasattr(self.predictor, "predict_device"):
             t0 = time.perf_counter()
             toks = jnp.asarray(tokenizer.encode_batch(
@@ -262,6 +300,8 @@ class OmniRouter(Policy):
                     jnp.asarray(batch.available, jnp.float32),
                     jnp.asarray(threshold, jnp.float32), state,
                     jnp.asarray(share, jnp.float32)]
+            if self.pairs:
+                args.append(e_acc)
             if n_valid is not None:
                 args.append(jnp.asarray(n_valid, jnp.float32))
             x, info, state = fn(*args)
@@ -270,8 +310,12 @@ class OmniRouter(Policy):
             cap, _, cost = self.predictor.predict_arrays(batch)
             t1 = time.perf_counter()
             self.predict_seconds += t1 - t0
+            cost, cap = jnp.asarray(cost), jnp.asarray(cap)
+            if self.pairs:
+                didx, vidx = pair_index_arrays(self.pairs)
+                cost, cap = expand_pair_columns(cost, cap, didx, vidx, e_acc)
             x, info, state = self.stream_solver.route_window(
-                jnp.asarray(cost), jnp.asarray(cap), threshold,
+                cost, cap, threshold,
                 jnp.asarray(batch.available), state, share=share,
                 polish_margin=self.cfg.alpha_margin, n_valid=n_valid)
         x = np.asarray(x)

@@ -113,6 +113,77 @@ def decode_attention_kernel(q, k_cache, v_cache, pos, *, window: int = 0,
     return o, m, l
 
 
+def _paged_verify_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, on_ref, m_ref,
+                         l_ref, *, ps: int, p_max: int, g: int, window: int,
+                         scale: float):
+    # the q block folds the S query positions into the row axis (S·G rows);
+    # row r belongs to query position r // g, whose valid length is
+    # lens[b] + r // g — _split_partials broadcasts the (S·G, 1) column
+    # against its (S·G, page) position grid
+    rows = jax.lax.broadcasted_iota(jnp.int32, (q_ref.shape[2], 1), 0)
+    pos = len_ref[pl.program_id(0)] + rows // g
+    _split_partials(q_ref, k_ref, v_ref, on_ref, m_ref, l_ref,
+                    start=pl.program_id(2) * ps, pos=pos,
+                    t_valid=p_max * ps, window=window, scale=scale)
+
+
+def paged_verify_attention_kernel(q, k_pages, v_pages, block_table, lens, *,
+                                  window: int = 0, interpret: bool = True):
+    """Speculative-verify twin of ``paged_decode_attention_kernel``:
+    q is (B,S,H,D) — S query positions per sequence, query s of sequence b
+    masked to positions < lens[b] + s.  The S axis rides the q block's row
+    axis (S·G rows per (b, k) program), so the grid and the block-table
+    scalar-prefetch indirection are identical to the decode kernel.
+
+    Returns partials (o_num (B,K,P,S·G,D), m (B,K,P,S·G), l (B,K,P,S·G)).
+    """
+    b, s_q, h, d = q.shape
+    ps, kh = k_pages.shape[1], k_pages.shape[2]
+    g = h // kh
+    p_max = block_table.shape[1]
+    sg = s_q * g
+
+    # (B,S,H,D) -> (B, K, S·G, D): row r of program (b, k) is query
+    # position r // g, query-group r % g
+    qT = q.reshape(b, s_q, kh, g, d).transpose(0, 2, 1, 3, 4).reshape(
+        b, kh, sg, d)
+    bt = jnp.asarray(block_table, jnp.int32)
+    lens = jnp.asarray(lens, jnp.int32)
+
+    kernel = functools.partial(_paged_verify_kernel, ps=ps, p_max=p_max,
+                               g=g, window=window, scale=d ** -0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                       # (block_table, lens)
+        grid=(b, kh, p_max),
+        in_specs=[
+            pl.BlockSpec((1, 1, sg, d), lambda b_, k_, s_, bt_, ln_: (b_, k_, 0, 0)),
+            pl.BlockSpec((1, ps, 1, d),
+                         lambda b_, k_, s_, bt_, ln_: (bt_[b_, s_], 0, k_, 0)),
+            pl.BlockSpec((1, ps, 1, d),
+                         lambda b_, k_, s_, bt_, ln_: (bt_[b_, s_], 0, k_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, sg, d),
+                         lambda b_, k_, s_, bt_, ln_: (b_, k_, s_, 0, 0)),
+            pl.BlockSpec((1, 1, 1, sg),
+                         lambda b_, k_, s_, bt_, ln_: (b_, k_, s_, 0)),
+            pl.BlockSpec((1, 1, 1, sg),
+                         lambda b_, k_, s_, bt_, ln_: (b_, k_, s_, 0)),
+        ],
+    )
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kh, p_max, sg, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, kh, p_max, sg), jnp.float32),
+            jax.ShapeDtypeStruct((b, kh, p_max, sg), jnp.float32),
+        ],
+        interpret=interpret,
+    )(bt, lens, qT, k_pages, v_pages)
+    return o, m, l
+
+
 def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, on_ref, m_ref, l_ref,
                   *, ps: int, p_max: int, window: int, scale: float):
     # the k/v blocks hold the physical page bt_ref[b, s]; logically it spans

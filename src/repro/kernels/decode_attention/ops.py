@@ -13,7 +13,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .kernel import decode_attention_kernel, paged_decode_attention_kernel
+from .kernel import (decode_attention_kernel, paged_decode_attention_kernel,
+                     paged_verify_attention_kernel)
 
 
 def merge_partials(o, m, l):
@@ -65,3 +66,30 @@ def paged_decode_attention(q, k_pages, v_pages, block_table, lens, *,
                                             interpret=False)
     out = merge_partials(o, m, l)
     return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+@partial(jax.jit, static_argnames=("window", "use_kernel"))
+def paged_verify_attention(q, k_pages, v_pages, block_table, lens, *,
+                           window: int = 0, use_kernel: bool | None = None):
+    """Speculative verify: q (B,S,H,D) — S query positions per sequence,
+    query s of sequence b masked to cache positions < lens[b] + s.
+    Returns (B,S,H,D).
+
+    TPU: one Pallas launch (S folded into the q block rows, block table on
+    scalar prefetch).  Off TPU: the jnp reference.
+    """
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if not use_kernel:
+        from .ref import paged_verify_attention_ref
+        return paged_verify_attention_ref(q, k_pages, v_pages, block_table,
+                                          lens, window=window)
+    b, s_q, h, d = q.shape
+    kh = k_pages.shape[2]
+    g = h // kh
+    o, m, l = paged_verify_attention_kernel(q, k_pages, v_pages, block_table,
+                                            lens, window=window,
+                                            interpret=False)
+    out = merge_partials(o, m, l)                           # (B, K, S·G, D)
+    out = out.reshape(b, kh, s_q, g, d).transpose(0, 2, 1, 3, 4)
+    return out.reshape(b, s_q, h, d).astype(q.dtype)

@@ -149,6 +149,44 @@ def decode_attention_jnp(
     return out.reshape(b, 1, h, d).astype(q.dtype)
 
 
+def verify_attention_jnp(
+    q: jax.Array,        # (B, S, H, D) — S prewritten query positions
+    k_cache: jax.Array,  # (B, T, K, D)
+    v_cache: jax.Array,  # (B, T, K, D)
+    pos: jax.Array,      # scalar int32 — or (B,) valid lengths of query 0
+    *,
+    window: int = 0,
+) -> jax.Array:
+    """Speculative-verify twin of ``decode_attention_jnp``: query position s
+    of sequence b is masked to cache positions < pos[b] + s.  Every op is the
+    S-batched form of the decode body (same operand dtypes, same fp32
+    accumulation), so each S-slice is bit-identical to the sequential decode
+    step at the same position — the property the acceptance loop's
+    bit-exactness guarantee rests on."""
+    b, s_q, h, d = q.shape
+    t, kh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    scale = d ** -0.5
+    qf = q.reshape(b, s_q, kh, g, d) * jnp.asarray(scale, q.dtype)
+    s = jnp.einsum("bskgd,btkd->bskgt", qf, k_cache,
+                   preferred_element_type=jnp.float32)
+    kv_pos = jnp.arange(t)
+    # per-position valid lengths (B or 1, S, 1)
+    pcol = (jnp.asarray(pos, jnp.int32).reshape(-1, 1)
+            + jnp.arange(s_q, dtype=jnp.int32)[None, :])[:, :, None]
+    valid = kv_pos[None, None, :] < pcol
+    if window > 0:
+        valid = valid & (kv_pos[None, None, :] > pcol - 1 - window)
+    s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bskgt,btkd->bskgd",
+                     (p / jnp.maximum(l, 1e-30)).astype(q.dtype),
+                     v_cache, preferred_element_type=jnp.float32)
+    return out.reshape(b, s_q, h, d).astype(q.dtype)
+
+
 def project_kv_token(cfg: ModelConfig, params: dict, x: jax.Array, pos,
                      use_rope: bool = True):
     """K/V projection (+RoPE at pos) for one decode token. x: (B,1,d);
@@ -196,11 +234,27 @@ def attention_block(
         # into the stacked carry buffer — or page pool — by the caller; one
         # token column only).  pos may be per-sequence (B,) lengths.
         pos = cache["pos"]
+        sq = x.shape[1]
         if use_rope:
-            q = rope(q, _pos2d(pos, x.shape[1]), cfg.rope_theta)
+            q = rope(q, _pos2d(pos, sq), cfg.rope_theta)
         q = logical_shard(q, "batch", None, None, None)  # gather q heads
         if "k_pages" in cache:  # paged serving plane: block-table indirection
-            if cfg.use_pallas:
+            if sq > 1:
+                # speculative verify: S prewritten positions per sequence,
+                # one multi-position pass
+                if cfg.use_pallas:
+                    from repro.kernels.decode_attention.ops import paged_verify_attention
+                    out = paged_verify_attention(
+                        q, cache["k_pages"], cache["v_pages"],
+                        cache["block_table"], jnp.asarray(pos, jnp.int32) + 1,
+                        window=window)
+                else:
+                    from repro.kernels.decode_attention.ref import gather_pages
+                    out = verify_attention_jnp(
+                        q, gather_pages(cache["k_pages"], cache["block_table"]),
+                        gather_pages(cache["v_pages"], cache["block_table"]),
+                        jnp.asarray(pos, jnp.int32) + 1, window=window)
+            elif cfg.use_pallas:
                 from repro.kernels.decode_attention.ops import paged_decode_attention
                 out = paged_decode_attention(
                     q, cache["k_pages"], cache["v_pages"], cache["block_table"],
@@ -215,6 +269,9 @@ def attention_block(
                     q, gather_pages(cache["k_pages"], cache["block_table"]),
                     gather_pages(cache["v_pages"], cache["block_table"]),
                     jnp.asarray(pos, jnp.int32) + 1, window=window)
+        elif sq > 1:
+            out = verify_attention_jnp(q, cache["k"], cache["v"], pos + 1,
+                                       window=window)
         else:
             out = decode_attention_jnp(q, cache["k"], cache["v"], pos + 1,
                                        window=window)

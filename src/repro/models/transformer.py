@@ -354,6 +354,63 @@ def _decode_layer_paged(cfg: ModelConfig, kind: LayerKind, params: dict,
     raise ValueError(kind.block)
 
 
+def _verify_layer_paged(cfg: ModelConfig, kind: LayerKind, params: dict,
+                        x: jax.Array, stacked: Dict[str, jax.Array], i,
+                        block_table, lens):
+    """Speculative-verify twin of ``_decode_layer_paged``: ``x`` carries S
+    tokens per sequence sitting at positions ``lens[b] .. lens[b]+S-1``.
+    All S K/V columns are written into the page pool, then ONE multi-position
+    prewritten attention pass scores every position (query s masked to
+    positions <= lens[b]+s).  Per-position numerics are the S-batched form of
+    the decode-step ops, so slice s is bit-identical to the sequential decode
+    step at the same position.  Recurrent state (mlstm/slstm/hymba) advances
+    token-by-token and cannot be batch-verified — those families are fenced
+    at trace time."""
+    if kind.block != "attn":
+        raise NotImplementedError(
+            "speculative verify requires pure-attention layers; "
+            f"got {kind.block!r} (recurrent state advances token-by-token)")
+    ns = dict(stacked)
+    page_size = stacked["k"].shape[2]                # (L, n_pages, PS, K, D)
+    s_q = x.shape[1]
+    pos2 = lens[:, None] + jnp.arange(s_q, dtype=jnp.int32)[None, :]  # (B,S)
+    pidx = jnp.take_along_axis(block_table, pos2 // page_size, axis=1)
+    off = pos2 % page_size
+
+    def write_tokens(h, attn_params):
+        k_new, v_new = project_kv_token(cfg, attn_params, h, lens)
+        int8 = "k_scale" in stacked
+        if int8:
+            k_new, ksc = _quant_kv(k_new)
+            v_new, vsc = _quant_kv(v_new)
+            ns["k_scale"] = stacked["k_scale"].at[i, pidx, off].set(ksc)
+            ns["v_scale"] = stacked["v_scale"].at[i, pidx, off].set(vsc)
+        ns["k"] = stacked["k"].at[i, pidx, off].set(
+            k_new.astype(stacked["k"].dtype))
+        ns["v"] = stacked["v"].at[i, pidx, off].set(
+            v_new.astype(stacked["v"].dtype))
+        if int8:
+            from repro.kernels.decode_attention.ref import gather_pages
+            kd = gather_pages(_slice_layer(ns["k"], i), block_table).astype(cfg.dtype)
+            vd = gather_pages(_slice_layer(ns["v"], i), block_table).astype(cfg.dtype)
+            b, p = block_table.shape
+            ksc = jnp.take(_slice_layer(ns["k_scale"], i), block_table,
+                           axis=0).reshape(b, p * page_size, -1)
+            vsc = jnp.take(_slice_layer(ns["v_scale"], i), block_table,
+                           axis=0).reshape(b, p * page_size, -1)
+            return {"k": kd * ksc[..., None].astype(cfg.dtype),
+                    "v": vd * vsc[..., None].astype(cfg.dtype), "pos": lens}
+        return {"k_pages": _slice_layer(ns["k"], i),
+                "v_pages": _slice_layer(ns["v"], i),
+                "block_table": block_table, "pos": lens}
+
+    h = rms_norm(x, params["ln1"], cfg.norm_eps)
+    lc = write_tokens(h, params["attn"])
+    a, _ = attention_block(cfg, params["attn"], h, causal=True,
+                           window=kind.window, cache=lc, prewritten=True)
+    return _ffn_residual(cfg, kind, params, x + a), ns
+
+
 class DecoderLM:
     """Dense / MoE / hybrid / xLSTM decoder language model."""
 
@@ -558,5 +615,45 @@ class DecoderLM:
             new_segs.append(list(seg_state))
         h = rms_norm(x, params["final_norm"], cfg.norm_eps)
         logits = jnp.einsum("bd,vd->bv", h[:, -1], self._out_table(params),
+                            preferred_element_type=jnp.float32)
+        return {"segs": new_segs}, logits
+
+    # -- paged multi-position verify (speculative cascade) --------------------
+    #
+    # The strong endpoint scores all S draft positions in ONE pass: layer
+    # numerics are the S-batched form of the decode-step ops (same operand
+    # dtypes, same fp32 accumulation), so logits[:, s] is bit-identical to
+    # the sequential decode_step_paged logits at position lens + s — the
+    # property the acceptance loop's "speculative greedy == strong-only
+    # greedy" guarantee rests on.
+    def verify_step_paged(self, params, state: dict, tokens: jax.Array,
+                          block_table: jax.Array, lens: jax.Array):
+        """tokens: (B,S) int32 — token s is the input at position lens[b]+s
+        (its K/V is written there); block_table (B,P); lens (B,) int32.
+        Returns (new_state, logits (B,S,V)): logits[:, s] scores the token
+        FOLLOWING position lens+s.  Attention-family layers only — recurrent
+        blocks raise NotImplementedError at trace time."""
+        cfg = self.cfg
+        block_table = jnp.asarray(block_table, jnp.int32)
+        lens = jnp.asarray(lens, jnp.int32)
+        x = self._embed_input(params, tokens, None)
+        new_segs: List[list] = []
+        for si, (count, pattern) in enumerate(self.plan):
+            seg_params = params["segs"][si]
+            seg_state = tuple(state["segs"][si])
+
+            def body(carry, lp, _pattern=pattern):
+                x, sc, i = carry
+                sc = list(sc)
+                for j, kind in enumerate(_pattern):
+                    x, sc[j] = _verify_layer_paged(cfg, kind, lp[j], x, sc[j],
+                                                   i, block_table, lens)
+                return (x, tuple(sc), i + 1), None
+
+            init = (x, seg_state, jnp.zeros((), jnp.int32))
+            (x, seg_state, _), _ = jax.lax.scan(body, init, seg_params)
+            new_segs.append(list(seg_state))
+        h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,vd->bsv", h, self._out_table(params),
                             preferred_element_type=jnp.float32)
         return {"segs": new_segs}, logits

@@ -73,6 +73,22 @@ def null_route_features(batch):
 
 
 @dataclasses.dataclass
+class _SpecSeq:
+    """One speculative sequence: a slot on BOTH pair endpoints, driven by
+    the server's pair rounds instead of the chunk loop.  ``base`` is the
+    accepted length (prompt + emitted tokens) — both endpoints' ``lens``
+    mirrors equal it between rounds; ``pending`` is the next token to feed
+    (the strong model's last emission, or the final prompt token)."""
+    req: "Request"
+    pair: int
+    d_slot: int
+    v_slot: int
+    pending: int
+    base: int
+    remaining: int
+
+
+@dataclasses.dataclass
 class Request:
     rid: int
     tokens: np.ndarray           # prompt token ids
@@ -188,6 +204,12 @@ class Endpoint:
                               donate_argnums=(0,))
         self._reset = jax.jit(reset_slot, donate_argnums=(0,))
         self._chunk = jax.jit(self._chunk_fn, donate_argnums=(1,))
+        # speculative cascade plane: one verify jit (shape-cached per draft
+        # window k) plus one k-step draft chunk per k — both created here /
+        # at first pair attach, so compile_count stays constant under churn
+        self._verify = jax.jit(self._verify_fn, donate_argnums=(1,))
+        self._spec_chunks: dict = {}   # draft window k -> jitted k-step chunk
+        self.spec_slots: set = set()   # slots driven by the speculative plane
 
         self.busy_steps = 0          # chunks dispatched
         self.decoded_tokens = 0      # real (non-masked) tokens emitted
@@ -208,7 +230,8 @@ class Endpoint:
         Constant once every prompt-length bucket has been seen — admissions
         and completions retrace nothing (the paged contract)."""
         return sum(_jit_cache_size(f) for f in
-                   (self._prefill, self._write, self._reset, self._chunk))
+                   (self._prefill, self._write, self._reset, self._chunk,
+                    self._verify, *self._spec_chunks.values()))
 
     def active_count(self) -> int:
         return self.L - len(self.alloc.free_slots)
@@ -227,6 +250,7 @@ class Endpoint:
         admissible again."""
         for slot, r in enumerate(self.slot_req):
             if r is req:
+                self.spec_slots.discard(slot)
                 self.slot_req[slot] = None
                 self.block_table[slot] = 0
                 self.lens[slot] = 0
@@ -295,13 +319,16 @@ class Endpoint:
         self.last_tokens[slot, 0] = toks[-1]
         self.slot_req[slot] = req
         self._san_check()
+        return slot
 
     # -- fused decode chunk --------------------------------------------------
-    def _chunk_fn(self, params, state, block_table, last, lens, remaining):
-        """``sync_every`` decode steps in one jit: on-device argmax sampling,
-        done-mask freezes finished sequences (their writes land at their own
-        frozen position, or the dump page once the slot is freed).  The host
-        sees one sync per chunk."""
+    def _chunk_fn(self, params, state, block_table, last, lens, remaining,
+                  length=None):
+        """``length`` (default ``sync_every``) decode steps in one jit:
+        on-device argmax sampling, done-mask freezes finished sequences
+        (their writes land at their own frozen position, or the dump page
+        once the slot is freed).  The host sees one sync per chunk."""
+        length = self.sync_every if length is None else length
 
         def body(carry, _):
             state, last, lens, remaining = carry
@@ -316,13 +343,18 @@ class Endpoint:
             return (state, nxt[:, None], lens, remaining), nxt
 
         (state, last, lens, remaining), toks = jax.lax.scan(
-            body, (state, last, lens, remaining), None,
-            length=self.sync_every)
-        return state, last, lens, remaining, toks.T   # toks: (B, sync_every)
+            body, (state, last, lens, remaining), None, length=length)
+        return state, last, lens, remaining, toks.T   # toks: (B, length)
 
     def step_begin(self):
         """Dispatch one decode chunk (async) — does not block."""
         if self.active_count() == 0:
+            return None
+        if self.spec_slots and all(
+                req is None or slot in self.spec_slots
+                for slot, req in enumerate(self.slot_req)):
+            # every live slot is speculative: the pair rounds drive them,
+            # so the frozen chunk would be pure wasted compute
             return None
         out = self._chunk(self.params, self._state,
                           jnp.asarray(self.block_table),
@@ -340,7 +372,9 @@ class Endpoint:
         last, lens, remaining, toks = (np.array(x) for x in pending)
         finished = []
         for slot, req in enumerate(self.slot_req):
-            if req is None:
+            if req is None or slot in self.spec_slots:
+                # spec slots ride the chunk frozen (remaining 0); the
+                # server's pair rounds emit and complete them
                 continue
             take = int(min(self.remaining[slot], self.sync_every))
             req.output.extend(int(t) for t in toks[slot, :take])
@@ -366,6 +400,144 @@ class Endpoint:
     def step(self) -> List[Request]:
         """One decode chunk for every active sequence (dispatch + collect)."""
         return self.step_end(self.step_begin())
+
+    # -- speculative cascade plane ---------------------------------------------
+    # Spec slots hold a normal slot + pages but are frozen for the chunk
+    # loop (remaining stays 0, step_end skips them); the server's pair
+    # rounds drive them through draft_round / verify_round below and
+    # advance ``lens`` only by the accepted length.  Every position >= lens
+    # is written by a round before anything attends to it, so rejected
+    # draft KV is never read — pages past the accepted prefix can therefore
+    # be handed back to the allocator each round (rollback_pages) and
+    # re-allocated fresh by the next round's ensure_pages.
+
+    def can_serve_spec(self, req: Request, k: int) -> bool:
+        """Spec variant of :meth:`can_serve`: the draft overshoots up to
+        ``k - 1`` positions past the last accepted token, so the fixed
+        shapes need that much headroom on top of prompt + output."""
+        return len(req.tokens) - 1 + req.max_new + k - 1 <= self.t_max
+
+    def admit_spec(self, req: Request, k: int) -> int:
+        """Admit a speculative sequence: normal admission (prefill into
+        pages), then freeze the slot and mark it spec-driven."""
+        if self._has_recurrent or not self._has_kv:
+            raise NotImplementedError(
+                "speculative decode needs rollback-able paged KV "
+                "(pure-attention models only)")
+        if not self.can_serve_spec(req, k):
+            raise ValueError(f"request {req.rid} + draft window {k} "
+                             f"exceeds t_max={self.t_max}")
+        slot = self.admit(req)
+        self.remaining[slot] = 0
+        self.spec_slots.add(slot)
+        return slot
+
+    def release_spec(self, slot: int):
+        """Free a finished speculative slot through the normal paths."""
+        self.spec_slots.discard(slot)
+        self.slot_req[slot] = None
+        self.block_table[slot] = 0
+        self.lens[slot] = 0
+        self.last_tokens[slot, 0] = 0
+        self.alloc.release_pages(self._slot_pages[slot])
+        self._slot_pages[slot] = []
+        self.alloc.release_slot(slot)
+        self._san_check()
+
+    def ensure_pages(self, slot: int, n_tokens: int):
+        """Grow a spec slot's coverage to ``n_tokens`` positions before a
+        round writes them (the inverse of :meth:`rollback_pages`)."""
+        need = -(-n_tokens // self.page_size)
+        have = len(self._slot_pages[slot])
+        if need > have:
+            pages = self.alloc.alloc_pages(need - have)
+            self._slot_pages[slot].extend(pages)
+            self.block_table[slot, have:need] = pages
+            self._san_check()
+
+    def rollback_pages(self, slot: int, n_tokens: int):
+        """Release pages holding ONLY rejected draft positions (past the
+        accepted prefix of ``n_tokens``) back through the allocator — the
+        PageSan shadow sees real alloc/release churn every round."""
+        keep = -(-n_tokens // self.page_size)
+        pages = self._slot_pages[slot]
+        if len(pages) > keep:
+            self.alloc.release_pages(pages[keep:])
+            self.block_table[slot, keep:len(pages)] = 0
+            del pages[keep:]
+            self._san_check()
+
+    def _spec_chunk(self, k: int):
+        fn = self._spec_chunks.get(k)
+        if fn is None:
+            fn = jax.jit(partial(self._chunk_fn, length=k),
+                         donate_argnums=(1,))
+            self._spec_chunks[k] = fn
+        return fn
+
+    def draft_round(self, slot_tokens: dict, k: int) -> np.ndarray:
+        """Draft ``k`` tokens for every slot in ``slot_tokens`` (slot ->
+        pending token) in one jitted k-step scan over the full fixed batch.
+        Other slots ride along frozen (remaining 0): their in-flight writes
+        land at their own frozen position, which the next chunk or round
+        rewrites before anything attends to it.  Returns the (L, k) drafted
+        token matrix; host mirrors are untouched — the draft's on-device
+        lens advance is discarded, acceptance decides the real advance."""
+        last = self.last_tokens.copy()
+        rem = np.zeros_like(self.remaining)
+        for slot, tok in slot_tokens.items():
+            last[slot, 0] = tok
+            rem[slot] = k
+        out = self._spec_chunk(k)(
+            self.params, self._state, jnp.asarray(self.block_table),
+            jnp.asarray(last), jnp.asarray(self.lens), jnp.asarray(rem))
+        self._state = out[0]
+        self.busy_steps += 1
+        return np.asarray(out[4])
+
+    def _verify_fn(self, params, state, tokens, block_table, lens,
+                   spec_mask, remaining):
+        """One verify round in-jit: all k positions in ONE batched paged
+        verify step, acceptance included.  Every decision (draft/strong
+        matches, accepted prefix, emit count, next pending token) stays on
+        device; the host syncs the three result arrays once per round."""
+        state, logits = self.model.verify_step_paged(
+            params, state, tokens, block_table, lens)
+        strong = jnp.argmax(logits[:, :, : self.cfg.vocab_size],
+                            axis=-1).astype(jnp.int32)          # (B, k)
+        # tokens[:, 1:] are the draft continuations d_1..d_{k-1}; draft
+        # position j survives iff it equals the strong argmax s_{j-1}
+        matches = (tokens[:, 1:] == strong[:, :-1]).astype(jnp.int32)
+        prefix = jnp.cumprod(matches, axis=1).sum(axis=1)       # (B,)
+        # accepted prefix + the strong model's correction token, clamped by
+        # the per-sequence output budget
+        n_emit = jnp.minimum(prefix + 1, jnp.maximum(remaining, 1))
+        n_emit = jnp.where(spec_mask, n_emit, 0).astype(jnp.int32)
+        idx = jnp.maximum(n_emit - 1, 0)
+        pending = jnp.take_along_axis(strong, idx[:, None], axis=1)[:, 0]
+        return state, strong, n_emit, pending
+
+    def verify_round(self, slot_tokens: dict, slot_rem: dict, k: int):
+        """Verify every spec slot's k draft positions in one batched
+        multi-position paged-decode step.  Non-spec rows are masked to the
+        dump page (block table 0, len 0) so their k-position writes can
+        never touch live pages.  Returns host (strong, n_emit, pending)
+        from a single batched device transfer."""
+        toks = np.zeros((self.L, k), np.int32)
+        mask = np.zeros((self.L,), bool)
+        rem = np.zeros((self.L,), np.int32)
+        for slot, tv in slot_tokens.items():
+            toks[slot] = tv
+            mask[slot] = True
+            rem[slot] = slot_rem[slot]
+        bt = np.where(mask[:, None], self.block_table, 0)
+        lens = np.where(mask, self.lens, 0)
+        out = self._verify(self.params, self._state, jnp.asarray(toks),
+                           jnp.asarray(bt), jnp.asarray(lens),
+                           jnp.asarray(mask), jnp.asarray(rem))
+        self._state = out[0]
+        self.busy_steps += 1
+        return jax.device_get(out[1:])
 
 
 class RestartEndpoint:
@@ -491,11 +663,26 @@ class _EngineExecutor:
         return float(self.steps)
 
     def loads(self) -> np.ndarray:
-        return np.array([e.L for e in self.server.endpoints], float)
+        srv = self.server
+        vals = [float(e.L) for e in srv.endpoints]
+        if srv.spec_pairs:
+            pc = srv._pair_counts()
+            for p, pair in enumerate(srv.spec_pairs):
+                d_ep = srv.endpoints[pair.draft]
+                v_ep = srv.endpoints[pair.verify]
+                free = min(d_ep.L - d_ep.active_count(),
+                           v_ep.L - v_ep.active_count())
+                # a pair column can take min(free on both ends) MORE
+                # sequences: report load so available == that headroom
+                vals.append(float(pc[p] + free))
+        return np.array(vals, float)
 
     def counts(self) -> np.ndarray:
-        return np.array([e.active_count() for e in self.server.endpoints],
-                        float)
+        srv = self.server
+        vals = [float(e.active_count()) for e in srv.endpoints]
+        if srv.spec_pairs:
+            vals.extend(float(c) for c in srv._pair_counts())
+        return np.array(vals, float)
 
     def dispatch(self, items, x) -> List[Request]:
         rejected = []
@@ -508,6 +695,24 @@ class _EngineExecutor:
         t = float(self.steps)
         for req, j in zip(items, x):
             j = int(j)
+            if j >= len(srv.endpoints):
+                # pair column: admit onto BOTH the pair's endpoints
+                pair = srv.spec_pairs[j - len(srv.endpoints)]
+                d_ep = srv.endpoints[pair.draft]
+                v_ep = srv.endpoints[pair.verify]
+                if not (d_ep.can_serve_spec(req, pair.k)
+                        and v_ep.can_serve_spec(req, pair.k)):
+                    req.done = True
+                    req.endpoint = j
+                    req.output = []
+                    req.finished = time.perf_counter()
+                    srv.completed.append(req)
+                elif d_ep.has_capacity() and v_ep.has_capacity():
+                    req.admit_step = float(self.steps)
+                    srv.admit_spec(req, j - len(srv.endpoints))
+                else:
+                    rejected.append(req)
+                continue
             ep = srv.endpoints[j]
             if not getattr(ep, "can_serve", lambda r: True)(req):
                 # can NEVER fit this endpoint's fixed shapes: fail it cleanly
@@ -570,6 +775,12 @@ class _EngineExecutor:
             fin = e.step_end(p)
             progressed = progressed or bool(fin) or bool(e.active_count())
             done.extend(fin)
+        if self.server._spec:
+            # pair rounds after the normal chunks: every round emits at
+            # least the strong model's correction token, so this always
+            # progresses
+            done.extend(self.server._spec_round())
+            progressed = True
         self.steps += 1
         done = self._resolve_hedges(self._completion_order(done))
         h = self.server.health
@@ -629,6 +840,8 @@ class _EngineExecutor:
         independent of sweep order and fresh every chunk."""
         t = float(self.steps)
         for i, req in self._fault_candidates():
+            if req.rid in self.server._spec:
+                continue    # spec sequences live outside the fault plane
             if plan.flake(i, t, req.rid, self.steps):
                 if self.server.health is not None:
                     events.append((int(i), False, 0.0, int(req.rid)))
@@ -643,6 +856,8 @@ class _EngineExecutor:
         cands = self._fault_candidates()
         seen = set()
         for i, req in cands:
+            if req.rid in self.server._spec:
+                continue    # spec sequences live outside the fault plane
             seen.add(id(req))
             out_len = len(req.output or ())
             ent = self._progress.get(id(req))
@@ -738,7 +953,7 @@ class _EngineExecutor:
         if srv.hedge_after <= 0:
             return
         for i, req in self._hedge_candidates():
-            if (req.hedged or req.done
+            if (req.hedged or req.done or req.rid in srv._spec
                     or self.steps - req.admit_step < srv.hedge_after):
                 continue
             alt = self._pick_alt(i, req)
@@ -809,7 +1024,8 @@ class MultiLLMServer:
                  stream: bool = False, horizon: int = 0,
                  window_steps: float = 0.0, fault_plan=None, health=None,
                  retry_budget: int = 2, backoff_steps: float = 4.0,
-                 stall_after_chunks: int = 0):
+                 stall_after_chunks: int = 0, spec_pairs=(),
+                 adapt_window=None):
         self.endpoints = endpoints
         self.policy = policy
         cap = sum(e.L for e in endpoints)
@@ -833,6 +1049,29 @@ class MultiLLMServer:
         self.backoff_steps = backoff_steps   # retry k re-enters after 2^k*this
         self.stall_after_chunks = stall_after_chunks  # watchdog: no output
         #                                      growth for K chunks -> cancel
+        self.adapt_window = adapt_window     # core.control.AdaptiveWindow
+        # --- speculative cascade plane (ISSUE 10): router-selected
+        # (draft, verify) pair columns; must MATCH the policy's
+        # RouterConfig.spec_pairs when the policy is an OmniRouter ---
+        self.spec_pairs = tuple(spec_pairs)
+        self._spec: dict = {}       # rid -> _SpecSeq
+        self.spec_rounds = 0        # per-sequence verify rounds run
+        self.spec_emitted = 0       # tokens emitted by the spec plane
+        if self.spec_pairs:
+            if self.health is not None:
+                raise NotImplementedError(
+                    "speculative pair columns extend loads/counts past the "
+                    "HealthTracker's model axis; run spec pools without "
+                    "health (acceptance EWMAs do the pair repricing)")
+            for p in self.spec_pairs:
+                for j in (p.draft, p.verify):
+                    ep = self.endpoints[j]
+                    if getattr(ep, "_has_recurrent", True) \
+                            or not getattr(ep, "_has_kv", False):
+                        raise NotImplementedError(
+                            f"pair endpoint {j} ({ep.cfg.name}) is not a "
+                            f"pure-attention paged endpoint; speculative "
+                            f"decode needs rollback-able paged KV")
         self.failures = 0                    # requests failed past the budget
         self.retries = 0                     # attempts re-entered the queue
         self.queue: deque = deque()     # (arrival_step, Request)
@@ -870,6 +1109,83 @@ class MultiLLMServer:
     def _inflight(self) -> int:
         return sum(e.active_count() for e in self.endpoints)
 
+    # -- speculative cascade plane ---------------------------------------------
+    def _pair_counts(self) -> List[int]:
+        counts = [0] * len(self.spec_pairs)
+        for s in self._spec.values():
+            counts[s.pair] += 1
+        return counts
+
+    def admit_spec(self, req: Request, pair_idx: int):
+        """Admit one request speculatively: a slot + prompt prefill on BOTH
+        the pair's endpoints, driven by :meth:`_spec_round` from then on."""
+        pair = self.spec_pairs[pair_idx]
+        d_slot = self.endpoints[pair.draft].admit_spec(req, pair.k)
+        v_slot = self.endpoints[pair.verify].admit_spec(req, pair.k)
+        req.endpoint = len(self.endpoints) + pair_idx
+        plen = len(req.tokens) - 1
+        self._spec[req.rid] = _SpecSeq(
+            req=req, pair=pair_idx, d_slot=d_slot, v_slot=v_slot,
+            pending=int(req.tokens[-1]), base=plen, remaining=req.max_new)
+
+    def _spec_round(self) -> List[Request]:
+        """One draft+verify round for every live speculative sequence,
+        batched per pair: the draft endpoint decodes k tokens in one k-step
+        chunk, the verify endpoint scores all k positions in ONE batched
+        multi-position paged step, and the longest strong-matching prefix
+        plus the strong correction token is emitted.  Emissions are always
+        strong-model argmaxes, so spec output is bit-identical to decoding
+        on the verify endpoint alone.  Rejected draft pages roll back
+        through the allocator; live acceptance feeds the router's pair-cost
+        EWMAs (AcceptanceTracker — the HealthTracker-style repricing)."""
+        finished: List[Request] = []
+        acc = getattr(self.policy, "acceptance", None)
+        for p, pair in enumerate(self.spec_pairs):
+            seqs = [s for s in self._spec.values() if s.pair == p]
+            if not seqs:
+                continue
+            d_ep = self.endpoints[pair.draft]
+            v_ep = self.endpoints[pair.verify]
+            k = pair.k
+            for s in seqs:
+                d_ep.ensure_pages(s.d_slot, s.base + k)
+                v_ep.ensure_pages(s.v_slot, s.base + k)
+            draft = d_ep.draft_round({s.d_slot: s.pending for s in seqs}, k)
+            v_tokens, v_rem = {}, {}
+            for s in seqs:
+                row = np.empty((k,), np.int32)
+                row[0] = s.pending
+                row[1:] = draft[s.d_slot, : k - 1]
+                v_tokens[s.v_slot] = row
+                v_rem[s.v_slot] = s.remaining
+            strong, n_emit, pending = v_ep.verify_round(v_tokens, v_rem, k)
+            for s in seqs:
+                ne = int(n_emit[s.v_slot])
+                s.req.output.extend(int(t) for t in strong[s.v_slot, :ne])
+                v_ep.decoded_tokens += ne
+                s.base += ne
+                s.remaining -= ne
+                s.pending = int(pending[s.v_slot])
+                d_ep.lens[s.d_slot] = s.base
+                v_ep.lens[s.v_slot] = s.base
+                d_ep.last_tokens[s.d_slot, 0] = s.pending
+                v_ep.last_tokens[s.v_slot, 0] = s.pending
+                d_ep.rollback_pages(s.d_slot, s.base)
+                v_ep.rollback_pages(s.v_slot, s.base)
+                if acc is not None:
+                    acc.record(p, ne)
+                self.spec_rounds += 1
+                self.spec_emitted += ne
+                if s.remaining <= 0:
+                    req = s.req
+                    req.done = True
+                    req.finished = time.perf_counter()
+                    d_ep.release_spec(s.d_slot)
+                    v_ep.release_spec(s.v_slot)
+                    del self._spec[req.rid]
+                    finished.append(req)
+        return finished
+
     def _fold(self, route_features, *, force: bool = False):
         """Fold ``_fold_buf`` into the policy's store — the manual entry
         point for completions that did not flow through :meth:`run` (the
@@ -892,7 +1208,8 @@ class MultiLLMServer:
         if self._controller is None:
             self._controller = StreamController(
                 self.policy, horizon=self.horizon or len(self.queue),
-                stream=self.stream, health=self.health)
+                stream=self.stream, health=self.health,
+                adapt_window=self.adapt_window)
         controller = self._controller
         windows0 = controller.windows
         iters0 = controller.dual_iters

@@ -350,6 +350,61 @@ def test_sc09_fires_on_bad_and_not_on_good(tmp_path):
     assert "SC09" not in _rules(good)
 
 
+# --- SC10 speculative-contract -----------------------------------------------
+
+SC10_BAD = """
+    import jax.numpy as jnp
+
+    def spec_accept_loop(ep, tokens, strong, pages):
+        emitted = []
+        for j in range(4):
+            if jnp.all(tokens[j] == strong[j]):      # host branch per token
+                emitted.append(int(jnp.argmax(strong[j])))  # sync per value
+        ep.alloc.release_pages(pages)    # bypasses the Endpoint rollback API
+        return emitted
+"""
+
+SC10_GOOD = """
+    import jax.numpy as jnp
+    import numpy as np
+
+    def _verify_accept(tokens, strong, remaining):
+        matches = (tokens[:, 1:] == strong[:, :-1]).astype(jnp.int32)
+        prefix = jnp.cumprod(matches, axis=1).sum(axis=1)
+        return jnp.minimum(prefix + 1, remaining)    # acceptance stays in-jit
+
+    def spec_accept_loop(ep, seqs, strong, n_emit):
+        strong, n_emit = np.asarray(strong), np.asarray(n_emit)  # ONE sync
+        for s in seqs:
+            s.base += int(n_emit[s.slot])
+            ep.rollback_pages(s.slot, s.base)        # the blessed release path
+
+    def host_only_bookkeeping(counts):
+        if counts.sum() > 0:                         # host value: fine
+            return True
+"""
+
+
+def test_sc10_fires_on_bad_and_not_on_good(tmp_path):
+    bad = _scan(tmp_path / "bad", {"src/repro/mod.py": SC10_BAD})
+    assert [f.rule for f in bad].count("SC10") == 3
+    good = _scan(tmp_path / "good", {"src/repro/mod.py": SC10_GOOD})
+    assert "SC10" not in _rules(good)
+
+
+def test_sc10_only_scopes_speculative_functions(tmp_path):
+    # the same shapes OUTSIDE spec/accept/draft/verify-named code belong to
+    # SC01's jurisdiction, not SC10's
+    src = """
+        import jax.numpy as jnp
+
+        def plain_loop(xs):
+            return [int(jnp.argmax(x)) for x in xs]
+    """
+    found = _scan(tmp_path, {"src/repro/mod.py": src})
+    assert "SC10" not in _rules(found)
+
+
 # --- SC08 drain-contract -----------------------------------------------------
 
 SC08_BAD_TEST = """
